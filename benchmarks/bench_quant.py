@@ -1,0 +1,70 @@
+"""Paper §4.2 (AutoQuant): bf16 vs int8 weight-only vs int8 dynamic GEMMs
+at decode-like and prefill-like row counts, the AutoQuant per-layer
+decision, and end-to-end quantized-model quality drift."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_fn
+from repro.configs import SMOKE_CONFIGS
+from repro.core import quantization as Q
+from repro.kernels import ops
+from repro.models import get_model
+
+
+def bench() -> list:
+    rows: list = []
+    k, n = 2048, 2048
+    w = jax.random.normal(jax.random.PRNGKey(0), (k, n), jnp.float32)
+    wq, ws = ops.quantize_int8(w, axis=0)
+    wb = w.astype(jnp.bfloat16)
+
+    for m, phase in ((4, "decode"), (1024, "prefill")):
+        x = jax.random.normal(jax.random.PRNGKey(1), (m, k), jnp.bfloat16)
+        f_bf16 = jax.jit(lambda x: x @ wb)
+        f_wo = jax.jit(lambda x: ops.int8_matmul_weight_only(x, wq, ws, impl="xla"))
+        f_dyn = jax.jit(lambda x: ops.int8_matmul_dynamic(x, wq, ws, impl="xla"))
+        us = {
+            "bf16": time_fn(f_bf16, x),
+            "int8_wo": time_fn(f_wo, x),
+            "int8_dyn": time_fn(f_dyn, x),
+        }
+        pick = Q.roofline_mode(m)
+        for name, t in us.items():
+            rows.append(
+                (f"quant/{phase}_m{m}/{name}", t,
+                 f"speedup_vs_bf16={us['bf16'] / t:.2f}x"
+                 + (f"; autoquant_picks={pick}" if name != "bf16" else ""))
+            )
+
+    # AutoQuant end-to-end: logit drift + weight-bytes saved
+    cfg = SMOKE_CONFIGS["llama3.2-1b"].replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab_size)
+    full, _, _ = model.forward(params, {"tokens": toks}, mode="train")
+    for tps, label in ((2, "decode"), (4096, "prefill")):
+        qp, counts = Q.autoquant(params, tokens_per_step=tps)
+        quant, _, _ = model.forward(qp, {"tokens": toks}, mode="train")
+        rel = float(
+            np.abs(np.asarray(quant) - np.asarray(full)).max()
+            / np.abs(np.asarray(full)).max()
+        )
+        rows.append(
+            (f"quant/autoquant_{label}", 0.0,
+             f"modes={counts}; logit_drift={rel:.4f}")
+        )
+
+    before = sum(
+        x.size * x.dtype.itemsize for x in jax.tree.leaves(params)
+    )
+    qp, _ = Q.autoquant(params, tokens_per_step=2)
+    after = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(qp))
+    rows.append(
+        ("quant/weight_bytes", 0.0,
+         f"before={before / 1e6:.1f}MB after={after / 1e6:.1f}MB "
+         f"(linears int8; embeds/norms untouched)")
+    )
+    return rows

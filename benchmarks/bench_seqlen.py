@@ -1,0 +1,65 @@
+"""Paper Table 2 + Fig 3: sequence-length & latency distribution.
+
+Samples each workload's length profile, runs real generation on a reduced
+model, and reports the latency spread — reproducing Obs #1: end-to-end
+latency is governed by DECODE STEP COUNT, not input length (correlation of
+latency with out_len >> with in_len)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks.common import Row, time_fn
+from repro.configs import SMOKE_CONFIGS
+from repro.core import engine, sampling
+from repro.models import get_model
+from repro.training import data
+
+
+def bench() -> list:
+    rows: list(Row) = []
+    cfg = SMOKE_CONFIGS["llama3.2-1b"]
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # Obs #1 experiment: same in_len, growing out_len vs same out_len,
+    # growing in_len — latency scales with decode steps.
+    lat_by_out, lat_by_in = [], []
+    for out_len in (4, 8, 16, 32):
+        p = jax.numpy.zeros((1, 16), jax.numpy.int32)
+        us = time_fn(
+            lambda p=p, o=out_len: engine.generate(
+                model, params, p, max_new_tokens=o, sampler=sampling.greedy
+            )["tokens"],
+            n_warmup=1, n_iter=3,
+        )
+        lat_by_out.append(us)
+        rows.append((f"seqlen/gen_out{out_len}_in16", us, f"decode_steps={out_len}"))
+    for in_len in (4, 16, 64, 128):
+        p = jax.numpy.zeros((1, in_len), jax.numpy.int32)
+        us = time_fn(
+            lambda p=p: engine.generate(
+                model, params, p, max_new_tokens=8, sampler=sampling.greedy
+            )["tokens"],
+            n_warmup=1, n_iter=3,
+        )
+        lat_by_in.append(us)
+        rows.append((f"seqlen/gen_in{in_len}_out8", us, "decode_steps=8"))
+
+    slope_out = (lat_by_out[-1] - lat_by_out[0]) / (32 - 4)
+    slope_in = (lat_by_in[-1] - lat_by_in[0]) / (128 - 4)
+    rows.append(
+        ("seqlen/obs1_latency_per_decode_step", slope_out,
+         f"per_input_token={slope_in:.1f}us; decode dominates (paper Obs #1)")
+    )
+
+    # Table 2 profiles: report sampled mean lengths for every paper task
+    for name, prof in data.PAPER_PROFILES.items():
+        ins, outs = data.sample_lengths(prof, 500, seed=1)
+        rows.append(
+            (f"seqlen/profile_{name}", 0.0,
+             f"in_mean={ins.mean():.0f}(paper {prof.in_mean}); "
+             f"out_mean={outs.mean():.0f}(paper {prof.out_mean}); "
+             f"in_std={ins.std():.0f} out_std={outs.std():.0f}")
+        )
+    return rows

@@ -1,0 +1,31 @@
+"""Shared benchmark utilities: timing, CSV row emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List, Tuple
+
+import jax
+
+Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+
+def time_fn(fn: Callable, *args, n_warmup: int = 2, n_iter: int = 5) -> float:
+    """Median wall-clock microseconds per call (blocking on device)."""
+    for _ in range(n_warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows: Iterable[Row]) -> List[Row]:
+    rows = list(rows)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows

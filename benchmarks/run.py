@@ -1,0 +1,65 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only seqlen,quant,...]
+
+Modules ↔ paper artifacts:
+  bench_seqlen        Table 2 + Fig 3 (length/latency distribution, Obs #1)
+  bench_op_breakdown  Fig 4 / Fig 10 (operator time breakdown, Obs #2/#3)
+  bench_attention     Fig 5 (SDPA / flash attention)
+  bench_compile       Fig 6/7 (static KV cache vs recompile; Obs #4 reorder)
+  bench_quant         §4.2 (AutoQuant int8)
+  bench_layerskip     Fig 8 (self-speculative decoding)
+  bench_hstu          §4.1.1 (fused pointwise attention scaling)
+  bench_roofline      Fig 9 (three-term roofline, + dry-run table if present)
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_seqlen",
+    "bench_op_breakdown",
+    "bench_attention",
+    "bench_compile",
+    "bench_quant",
+    "bench_layerskip",
+    "bench_hstu",
+    "bench_seamless",
+    "bench_roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated suffixes")
+    args = ap.parse_args()
+    picked = MODULES
+    if args.only:
+        want = {w.strip() for w in args.only.split(",")}
+        picked = [m for m in MODULES if m.replace("bench_", "") in want or m in want]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in picked:
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            rows = mod.bench()
+            for rname, us, derived in rows:
+                print(f'{rname},{us:.1f},"{derived}"')
+            print(
+                f'{name}/_wall,{(time.perf_counter() - t0) * 1e6:.0f},"module wall time"'
+            )
+        except Exception:
+            failures += 1
+            print(f'{name}/_error,0,"{traceback.format_exc(limit=3)}"', file=sys.stderr)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Batched serving driver (deliverable (b)): serve a small model with
+batched requests sampled from the paper's HumanEval length profile, via
+the fixed-slot BatchServer (static-cache prefill + decode executables).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch import serve
+
+
+def main():
+    serve.main([
+        "--arch", "llama3.2-1b", "--smoke",
+        "--n-requests", "8", "--batch-slots", "4", "--max-new", "16",
+        "--profile", "llama_humaneval",
+    ])
+
+
+if __name__ == "__main__":
+    main()

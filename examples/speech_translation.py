@@ -1,0 +1,54 @@
+"""Seamless-profile example (paper §2.1.3 / Obs #4): batched speech-to-text
+translation with the whisper-base backbone — stubbed conv frontend, real
+encoder/decoder, beam search with donated KV reorder.
+
+  PYTHONPATH=src python examples/speech_translation.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import engine
+from repro.models import get_model
+from repro.training import data
+
+
+def main():
+    cfg = get_smoke_config("whisper-base").replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # stub frontend: "audio" arrives as precomputed frame embeddings
+    batch = 4
+    prof = data.PAPER_PROFILES["seamless_s2t"]
+    ins, outs = data.sample_lengths(prof, batch, seed=2)
+    frames = jax.random.normal(
+        jax.random.PRNGKey(1), (batch, cfg.encdec.n_frames, cfg.d_model)
+    )
+    frame_lengths = jnp.asarray(
+        np.minimum(ins, cfg.encdec.n_frames).astype(np.int32)
+    )
+    print(f"S-T batch={batch}, frame lengths={list(map(int, frame_lengths))} "
+          f"(paper Fleurs profile: mean {prof.in_mean})")
+
+    t0 = time.perf_counter()
+    out = engine.generate_beam(
+        model, params, batch=batch, n_beams=4, bos_id=1, eos_id=2,
+        max_new_tokens=16,
+        extra_inputs={"frames": frames, "frame_lengths": frame_lengths},
+    )
+    dt = time.perf_counter() - t0
+    print(f"beam search (k=4, donated KV reorder): {dt:.2f}s")
+    for b in range(batch):
+        toks = np.asarray(out['tokens'][b])
+        print(f"  hyp[{b}] score={float(out['scores'][b]):.2f} tokens={toks[:10]}")
+    # Obs #2: only the text decoder is autoregressive — the encoder ran
+    # exactly once per request (inside prefill), every decode step touched
+    # only decoder self/cross caches.
+
+
+if __name__ == "__main__":
+    main()

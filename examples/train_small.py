@@ -1,0 +1,59 @@
+"""End-to-end training driver (deliverable (b)): train a small dense model
+(~100M-class; 67M params with tied embeddings) for a few hundred steps on
+CPU, with checkpointing, LR schedule, and loss-curve verification.
+
+Evidence run (results/train_100m.log): 200 steps, loss 305 -> 43.9.
+
+  PYTHONPATH=src python examples/train_small.py [--steps 300]
+"""
+import argparse
+
+from repro.configs.base import ModelConfig
+from repro.training import data, optimizer as opt, train_loop
+
+# 100M-class llama-family model (67.4M params, CPU-trainable)
+CFG_100M = ModelConfig(
+    name="llama-100m-class",
+    family="dense",
+    n_layers=6,
+    d_model=640,
+    n_heads=10,
+    n_kv_heads=2,
+    d_ff=2560,
+    vocab_size=50_000,
+    tie_embeddings=True,
+    dtype="float32",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_100m.npz")
+    args = ap.parse_args()
+
+    cfg = CFG_100M
+    print(f"training {cfg.name}: {cfg.n_params() / 1e6:.1f}M params, "
+          f"{args.steps} steps @ batch {args.batch} x seq {args.seq}")
+    stream = data.token_stream(cfg, batch=args.batch, seq_len=args.seq)
+    res = train_loop.train(
+        cfg,
+        data=stream,
+        steps=args.steps,
+        opt_cfg=opt.OptimizerConfig(
+            lr=6e-4, warmup_steps=20, total_steps=args.steps
+        ),
+        log_every=20,
+        ckpt_path=args.ckpt,
+        ckpt_every=100,
+    )
+    first, last = res.metrics_history[0]["loss"], res.metrics_history[-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'OK: decreasing' if last < first else 'WARN: not decreasing'})")
+    print(f"checkpoint: {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

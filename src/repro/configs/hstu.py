@@ -1,0 +1,35 @@
+"""HSTU generative DLRM [Zhai et al., ICML'24] — paper-own extra config.
+
+The paper's fourth workload (§2.1.4): a non-autoregressive sequential
+transducer with pointwise-normalized attention (SiLU, no softmax) and
+relative attention bias. Not part of the assigned 40-pair table; included
+to reproduce the paper's HSTU rows (operator breakdown, fused-attention
+speedup, roofline position).
+
+Paper setup: 14 identical layers; layers >=3 cap attention context at 1024
+for speed (§3.1). Sequence lengths ~4814 from a synthetic production-like
+distribution.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hstu",
+    family="hstu",
+    n_layers=14,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=0,  # HSTU has no FFN: pointwise projection/transformation instead
+    vocab_size=6000,  # synthetic item-id space (§3.1)
+    hstu_max_attn_len=1024,
+)
+
+SMOKE = CONFIG.replace(
+    name="hstu-smoke",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    vocab_size=512,
+    hstu_max_attn_len=64,
+)

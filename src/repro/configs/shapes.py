@@ -1,0 +1,32 @@
+"""The four assigned input shapes.
+
+``train_*`` shapes lower ``train_step``; ``prefill_*`` lower a full-prompt
+``prefill_step``; ``decode_*`` lower ``serve_step`` — ONE new token against
+a KV cache of ``seq_len`` (never train_step).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def requires_subquadratic(self) -> bool:
+        return self.kind == "decode" and self.seq_len >= 262_144
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}

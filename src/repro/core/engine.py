@@ -1,0 +1,229 @@
+"""Generation engine: prefill + static-cache decode loops.
+
+This is the paper's end-to-end inference pipeline (§3.2): a single jitted
+prefill program and a single jitted decode-step program with static shapes
+(the §4.1.2 lever) — every decode step replays the same compiled
+executable, the XLA analogue of CUDA-Graph replay. Decode loops run under
+``lax.scan`` so the whole generation is ONE program when desired
+(``generate_scanned``), or step-by-step from Python for serving
+(``Engine.step``), where the per-step executable is cached by jit.
+
+Engines:
+- ``generate``            — batch top-p/greedy generation (Llama profile).
+- ``generate_beam``       — beam search with per-step KV reorder
+                            (Seamless profile, Obs #4).
+- ``generate_contrastive``— Chameleon T-I: conditional + unconditional
+                            streams, 2 forwards/step (§2.1.2).
+- ``layerskip`` lives in core/layerskip.py and reuses this module's
+  prefill/commit plumbing.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kv_cache, sampling
+from repro.models.registry import Model
+
+
+def _last_logits(logits: jnp.ndarray, prompt_lengths: jnp.ndarray) -> jnp.ndarray:
+    """Gather the logits at each sequence's final prompt position."""
+    idx = jnp.maximum(prompt_lengths - 1, 0)
+    return jnp.take_along_axis(
+        logits, idx[:, None, None], axis=1
+    )[:, 0]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def _prefill(model: Model, params, tokens, prompt_lengths, max_len, extra=None):
+    cache = model.init_cache(tokens.shape[0], max_len)
+    batch = {"tokens": tokens, "prompt_lengths": prompt_lengths}
+    if extra:
+        batch.update(extra)
+    logits, cache, _ = model.forward(params, batch, cache=cache, mode="prefill")
+    return _last_logits(logits, prompt_lengths), cache
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def _decode_step(model: Model, params, cache, token):
+    logits, cache, _ = model.forward(
+        params, {"tokens": token[:, None]}, cache=cache, mode="decode"
+    )
+    return logits[:, 0], cache
+
+
+def generate(
+    model: Model,
+    params,
+    prompt_tokens: jnp.ndarray,  # [B, Tp] right-padded
+    *,
+    prompt_lengths: Optional[jnp.ndarray] = None,
+    max_new_tokens: int = 32,
+    sampler: sampling.Sampler = sampling.greedy,
+    key: Optional[jax.Array] = None,
+    eos_id: Optional[int] = None,
+    extra_inputs: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Dict[str, jnp.ndarray]:
+    """Python-loop generation (serving style): one jitted prefill + one
+    jitted decode executable replayed per step."""
+    b, tp = prompt_tokens.shape
+    if prompt_lengths is None:
+        prompt_lengths = jnp.full((b,), tp, jnp.int32)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    max_len = tp + max_new_tokens + 1
+
+    logits, cache = _prefill(
+        model, params, prompt_tokens, prompt_lengths, max_len, extra_inputs
+    )
+    key, sub = jax.random.split(key)
+    token = sampler(logits, sub)
+    out = [token]
+    done = jnp.zeros((b,), bool) if eos_id is not None else None
+    for _ in range(max_new_tokens - 1):
+        logits, cache = _decode_step(model, params, cache, token)
+        key, sub = jax.random.split(key)
+        token = sampler(logits, sub)
+        if eos_id is not None:
+            done = done | (token == eos_id)
+            token = jnp.where(done, eos_id, token)
+        out.append(token)
+        if eos_id is not None and bool(done.all()):
+            break
+    return {
+        "tokens": jnp.stack(out, axis=1),
+        "cache": cache,
+        "n_steps": len(out),
+    }
+
+
+def generate_scanned(
+    model: Model,
+    params,
+    prompt_tokens: jnp.ndarray,
+    *,
+    max_new_tokens: int = 32,
+    sampler: sampling.Sampler = sampling.greedy,
+    key: Optional[jax.Array] = None,
+    extra_inputs: Optional[Dict[str, jnp.ndarray]] = None,
+) -> jnp.ndarray:
+    """Whole-generation-as-one-program variant: prefill + lax.scan decode.
+    This is the fully static pipeline the dry-run lowers for decode shapes."""
+    b, tp = prompt_tokens.shape
+    prompt_lengths = jnp.full((b,), tp, jnp.int32)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    max_len = tp + max_new_tokens + 1
+
+    logits, cache = _prefill(
+        model, params, prompt_tokens, prompt_lengths, max_len, extra_inputs
+    )
+    token0 = sampler(logits, key)
+
+    def step(carry, sub):
+        token, cache = carry
+        logits, cache = _decode_step(model, params, cache, token)
+        nxt = sampler(logits, sub)
+        return (nxt, cache), nxt
+
+    keys = jax.random.split(key, max_new_tokens - 1)
+    (_, _), rest = jax.lax.scan(step, (token0, cache), keys)
+    return jnp.concatenate([token0[None], rest], axis=0).T  # [B, max_new]
+
+
+# --------------------------------------------------------------------------
+# Beam search (Seamless S-T/T-T profile)
+# --------------------------------------------------------------------------
+
+def generate_beam(
+    model: Model,
+    params,
+    *,
+    batch: int,
+    n_beams: int,
+    bos_id: int,
+    eos_id: int,
+    max_new_tokens: int,
+    extra_inputs: Optional[Dict[str, jnp.ndarray]] = None,
+    length_penalty: float = 1.0,
+    donate_reorder: bool = True,
+) -> Dict[str, jnp.ndarray]:
+    """Beam search with per-step KV reorder. Inputs (e.g. encoder frames)
+    are tiled across beams; each step gathers the cache along the batch
+    axis by the surviving-parent permutation (paper Obs #4) — donated by
+    default (the optimized `copy_` form), or reallocating when
+    ``donate_reorder=False`` (the paper's baseline `index_select`)."""
+    bk = batch * n_beams
+    tiled_extra = None
+    if extra_inputs:
+        tiled_extra = {
+            k: jnp.repeat(v, n_beams, axis=0) for k, v in extra_inputs.items()
+        }
+    prompt = jnp.full((bk, 1), bos_id, jnp.int32)
+    lengths = jnp.ones((bk,), jnp.int32)
+    logits, cache = _prefill(
+        model, params, prompt, lengths, max_new_tokens + 2, tiled_extra
+    )
+
+    state = sampling.beam_init(batch, n_beams, max_new_tokens)
+    reorder = kv_cache.reorder_donated if donate_reorder else kv_cache.reorder_realloc
+    token = None
+    for step_i in range(max_new_tokens):
+        if step_i > 0:
+            logits, cache = _decode_step(model, params, cache, token)
+        state, beam_idx = sampling.beam_step(
+            state, logits, n_beams, eos_id, length_penalty
+        )
+        cache = reorder(cache, beam_idx)  # Obs #4: the KV_Cache_Reorder op
+        token = state.tokens[:, step_i]
+        if bool(state.finished.all()):
+            break
+    tokens, scores = sampling.beam_finalize(state, n_beams, length_penalty)
+    return {"tokens": tokens, "scores": scores, "n_steps": state.step}
+
+
+# --------------------------------------------------------------------------
+# Contrastive decoding (Chameleon T-I profile, §2.1.2)
+# --------------------------------------------------------------------------
+
+def generate_contrastive(
+    model: Model,
+    params,
+    prompt_tokens: jnp.ndarray,  # [B, Tp] conditional (text) prompt
+    *,
+    uncond_token: int,
+    n_image_tokens: int,
+    guidance: float = 3.0,
+    sampler: sampling.Sampler = sampling.greedy,
+    key: Optional[jax.Array] = None,
+) -> Dict[str, jnp.ndarray]:
+    """Chameleon T-I: the conditional stream sees the prompt, the
+    unconditional stream a null prompt; each step runs BOTH (the paper's
+    "decodes twice at each time step"), combines logits contrastively, and
+    feeds the same sampled image token to both streams."""
+    from repro.models import vlm
+
+    cfg = model.config
+    b, tp = prompt_tokens.shape
+    key = key if key is not None else jax.random.PRNGKey(0)
+    # stack [cond; uncond] into one batch of 2B: 1 model, 2 streams
+    uncond = jnp.full((b, tp), uncond_token, jnp.int32)
+    both = jnp.concatenate([prompt_tokens, uncond], axis=0)
+    lengths = jnp.full((2 * b,), tp, jnp.int32)
+    logits, cache = _prefill(
+        model, params, both, lengths, tp + n_image_tokens + 1, None
+    )
+
+    tokens = []
+    for _ in range(n_image_tokens):
+        cond_l, uncond_l = logits[:b], logits[b:]
+        mixed = vlm.contrastive_logits(cond_l, uncond_l, guidance)
+        mixed = vlm.image_token_mask(cfg, mixed)
+        key, sub = jax.random.split(key)
+        token = sampler(mixed, sub)
+        tokens.append(token)
+        token2 = jnp.concatenate([token, token], axis=0)
+        logits, cache = _decode_step(model, params, cache, token2)
+    return {"tokens": jnp.stack(tokens, axis=1), "n_steps": n_image_tokens}

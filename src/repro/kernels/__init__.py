@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes:
+
+- flash_attention   — the SDPA/FlashAttention lever (§4.1.1)
+- decode_attention  — flash-decode for the memory-bound token loop (Obs #1)
+- int8_matmul       — AutoQuant weight-only + dynamic GEMMs (§4.2)
+- rmsnorm           — fusion lever (§4.1.2)
+- ssd_scan          — Mamba-2 SSD chunked scan (assigned ssm arch)
+- hstu_attention    — fused pointwise attention + in-VMEM rel-bias (§4.1.1)
+
+Each has a jit'd dispatch wrapper in ops.py and a pure-jnp oracle in
+ref.py; all are validated on CPU with interpret=True.
+"""

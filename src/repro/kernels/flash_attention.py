@@ -1,0 +1,161 @@
+"""Pallas TPU flash-attention kernel (the paper's SDPA lever, §4.1.1,
+re-tiled for the TPU memory hierarchy).
+
+TPU adaptation of FlashAttention-2:
+- (block_q × block_k) tiles stream HBM→VMEM; score GEMMs hit the 128×128
+  MXU, so blocks default to multiples of 128;
+- the online-softmax running state (m, l, acc) lives in VMEM scratch and
+  persists across the sequentially-executed innermost grid dimension
+  (TPU grids are sequential, which replaces the CUDA thread-block carry);
+- GQA-native: the grid runs over KV heads; each step loads ONE KV tile and
+  applies it to the whole q-head group (KV tiles read once per group
+  instead of once per q head — the HBM-traffic win GQA exists for);
+- causal / sliding-window / validity masking via position tiles; fully
+  masked KV tiles are skipped with ``pl.when`` (block-skipping is
+  predication on TPU rather than grid pruning).
+
+Validated in ``interpret=True`` mode against kernels/ref.py on CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    qpos_ref, kpos_ref, kval_ref,  # [1, bq] / [1, bk] / [1, bk]
+    q_ref, k_ref, v_ref,  # [1, bq, 1, G, D] / [1, bk, 1, D] / [1, bk, 1, Dv]
+    o_ref,  # [1, bq, 1, G, Dv]
+    m_scr, l_scr, acc_scr,  # VMEM: [bq, G], [bq, G], [bq, G, Dv]
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    n_k_blocks: int,
+):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qpos = qpos_ref[0]  # [bq]
+    kpos = kpos_ref[0]  # [bk]
+    kval = kval_ref[0]  # [bk]
+
+    ok = jnp.broadcast_to(kval[None, :], (qpos.shape[0], kpos.shape[0]))
+    if causal:
+        ok = ok & (kpos[None, :] <= qpos[:, None])
+    if window is not None:
+        ok = ok & (kpos[None, :] > qpos[:, None] - window)
+
+    @pl.when(jnp.any(ok))
+    def _compute():  # predicated block-skipping for masked tiles
+        q = q_ref[0, :, 0].astype(jnp.float32) * scale  # [bq, G, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)  # [bk, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)  # [bk, Dv]
+        s = jax.lax.dot_general(
+            q, k, (((2,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [bq, G, bk]
+        s = jnp.where(ok[:, None, :], s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(ok[:, None, :], p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [bq, G, Dv]
+        acc_scr[...] = acc_scr[...] * alpha[..., None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0] = (acc_scr[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,  # [B, Tq, Hq, D]
+    k: jnp.ndarray,  # [B, Tk, Hkv, D]
+    v: jnp.ndarray,  # [B, Tk, Hkv, Dv]
+    *,
+    q_positions: jnp.ndarray,  # [B, Tq]
+    k_positions: jnp.ndarray,  # [B, Tk]
+    causal: bool = True,
+    window: Optional[int] = None,
+    k_valid: Optional[jnp.ndarray] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    from jax.experimental.pallas import tpu as pltpu
+
+    b, tq, hq, d = q.shape
+    tk, hkv, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+
+    pq = (-tq) % block_q
+    pk = (-tk) % block_k
+    if k_valid is None:
+        k_valid = jnp.ones((b, tk), bool)
+    else:
+        k_valid = jnp.broadcast_to(k_valid, (b, tk))
+    q_positions = jnp.broadcast_to(q_positions, (b, tq))
+    k_positions = jnp.broadcast_to(k_positions, (b, tk))
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pq)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, ((0, 0), (0, pk)))
+        k_valid = jnp.pad(k_valid, ((0, 0), (0, pk)))
+
+    tq_p, tk_p = tq + pq, tk + pk
+    n_q_blocks, n_k_blocks = tq_p // block_q, tk_p // block_k
+    qg = q.reshape(b, tq_p, hkv, g, d)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        n_k_blocks=n_k_blocks,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, n_q_blocks, n_k_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda ib, ih, iq, ik: (ib, iq)),
+            pl.BlockSpec((1, block_k), lambda ib, ih, iq, ik: (ib, ik)),
+            pl.BlockSpec((1, block_k), lambda ib, ih, iq, ik: (ib, ik)),
+            pl.BlockSpec(
+                (1, block_q, 1, g, d), lambda ib, ih, iq, ik: (ib, iq, ih, 0, 0)
+            ),
+            pl.BlockSpec((1, block_k, 1, d), lambda ib, ih, iq, ik: (ib, ik, ih, 0)),
+            pl.BlockSpec((1, block_k, 1, dv), lambda ib, ih, iq, ik: (ib, ik, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, 1, g, dv), lambda ib, ih, iq, ik: (ib, iq, ih, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, tq_p, hkv, g, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, g), jnp.float32),
+            pltpu.VMEM((block_q, g), jnp.float32),
+            pltpu.VMEM((block_q, g, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_positions, k_positions, k_valid, qg, k, v)
+    return out.reshape(b, tq_p, hq, dv)[:, :tq]

@@ -1,0 +1,196 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth for correctness: naive, fully materialized,
+numerically straightforward. Every Pallas kernel and every XLA fast path is
+tested ``assert_allclose`` against these.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import jax.nn
+
+
+def _broadcast_kv(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Repeat KV heads to match Q heads (GQA)."""
+    b, s, hkv, d = k.shape
+    hq = q.shape[2]
+    if hq == hkv:
+        return k
+    rep = hq // hkv
+    return jnp.repeat(k, rep, axis=2)
+
+
+def attention_mask(
+    q_positions: jnp.ndarray,  # [B, Tq] absolute positions of queries
+    k_positions: jnp.ndarray,  # [B, Tk] absolute positions of keys
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    k_valid: Optional[jnp.ndarray] = None,  # [B, Tk] bool
+) -> jnp.ndarray:
+    """[B, Tq, Tk] boolean mask; True = attend."""
+    qp = q_positions[:, :, None]
+    kp = k_positions[:, None, :]
+    mask = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), dtype=bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    if k_valid is not None:
+        mask &= k_valid[:, None, :]
+    return mask
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [B, Tq, Hq, D]
+    k: jnp.ndarray,  # [B, Tk, Hkv, D]
+    v: jnp.ndarray,  # [B, Tk, Hkv, Dv]
+    *,
+    q_positions: Optional[jnp.ndarray] = None,
+    k_positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    k_valid: Optional[jnp.ndarray] = None,
+    scale: Optional[float] = None,
+    bias: Optional[jnp.ndarray] = None,  # [B or 1, H or 1, Tq, Tk]
+) -> jnp.ndarray:
+    """Naive attention oracle: materializes the full [B,H,Tq,Tk] scores."""
+    b, tq, hq, d = q.shape
+    tk = k.shape[1]
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(tq)[None, :] + (tk - tq), (b, tq))
+    if k_positions is None:
+        k_positions = jnp.broadcast_to(jnp.arange(tk)[None, :], (b, tk))
+    scale = scale if scale is not None else d ** -0.5
+    k = _broadcast_kv(q, k)
+    v = _broadcast_kv(q, v)
+    scores = jnp.einsum("btHd,bsHd->bHts", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    if bias is not None:
+        scores = scores + bias.astype(jnp.float32)
+    mask = attention_mask(
+        q_positions, k_positions, causal=causal, window=window, k_valid=k_valid
+    )
+    scores = jnp.where(mask[:, None, :, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # rows that attend to nothing (fully masked) produce NaN from softmax of
+    # -inf; zero them (convention: empty context -> zero output).
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bHts,bsHd->btHd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # [B, Hq, D] — one new token per sequence
+    k: jnp.ndarray,  # [B, S, Hkv, D]
+    v: jnp.ndarray,  # [B, S, Hkv, Dv]
+    lengths: jnp.ndarray,  # [B] number of valid cache entries
+    *,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-token decode oracle. The new token's K/V must already be in
+    the cache (lengths includes it); masking is purely by validity."""
+    b, s, hkv, d = k.shape
+    k_valid = jnp.arange(s)[None, :] < lengths[:, None]
+    out = attention_ref(
+        q[:, None],
+        k,
+        v,
+        causal=False,
+        k_valid=k_valid,
+        scale=scale,
+    )
+    return out[:, 0]
+
+
+def rmsnorm_ref(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def int8_matmul_ref(
+    x: jnp.ndarray,  # [..., K] activations (bf16/f32)
+    w_q: jnp.ndarray,  # [K, N] int8 weights
+    w_scale: jnp.ndarray,  # [N] per-output-channel scales (f32)
+    x_scale: Optional[jnp.ndarray] = None,  # [..., 1] per-row scales (dynamic quant)
+) -> jnp.ndarray:
+    """Weight-only (x_scale=None) or dynamic (x pre-quantized int8) oracle."""
+    if x_scale is None:
+        w = w_q.astype(jnp.float32) * w_scale[None, :].astype(jnp.float32)
+        return (x.astype(jnp.float32) @ w).astype(x.dtype)
+    acc = jnp.matmul(
+        x.astype(jnp.int32), w_q.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    return acc.astype(jnp.float32) * x_scale.astype(jnp.float32) * w_scale[None, :]
+
+
+def ssd_ref(
+    x: jnp.ndarray,  # [B, T, H, P] inputs (P = head_dim)
+    dt: jnp.ndarray,  # [B, T, H] softplus'd step sizes
+    A: jnp.ndarray,  # [H] negative reals
+    B_: jnp.ndarray,  # [B, T, G, N] input matrices (G groups, N = d_state)
+    C: jnp.ndarray,  # [B, T, G, N] output matrices
+    D: jnp.ndarray,  # [H] skip connection
+    *,
+    initial_state: Optional[jnp.ndarray] = None,  # [B, H, P, N]
+) -> tuple:
+    """Sequential Mamba-2 SSD recurrence oracle.
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * x_t B_t^T ;  y_t = C_t h_t + D x_t
+    Returns (y [B,T,H,P], final_state [B,H,P,N]).
+    """
+    b, t, h, p = x.shape
+    g, n = B_.shape[2], B_.shape[3]
+    rep = h // g
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(B_.astype(jnp.float32), rep, axis=2)  # [B,T,H,N]
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+    Af = A.astype(jnp.float32)
+    state = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+    ys = []
+    for i in range(t):
+        decay = jnp.exp(dtf[:, i] * Af[None, :])  # [B, H]
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dtf[:, i], xf[:, i], Bf[:, i])
+        state = decay[:, :, None, None] * state + upd
+        y = jnp.einsum("bhn,bhpn->bhp", Cf[:, i], state)
+        ys.append(y)
+    y = jnp.stack(ys, axis=1) + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype), state
+
+
+def hstu_attention_ref(
+    q: jnp.ndarray,  # [B, T, H, D]
+    k: jnp.ndarray,  # [B, T, H, D]
+    v: jnp.ndarray,  # [B, T, H, D]
+    rel_bias: jnp.ndarray,  # [2*max_rel-1] learned relative position bias table
+    *,
+    max_attn_len: Optional[int] = None,
+    lengths: Optional[jnp.ndarray] = None,  # [B]
+) -> jnp.ndarray:
+    """HSTU pointwise-normalized attention oracle (§4.1.1 of the paper):
+    A = silu(QK^T + rab) / T ; out = A @ V   (no softmax)."""
+    b, t, h, d = q.shape
+    max_rel = (rel_bias.shape[0] + 1) // 2
+    qp = jnp.arange(t)
+    delta = jnp.clip(qp[:, None] - qp[None, :], -(max_rel - 1), max_rel - 1)
+    rab = rel_bias[delta + (max_rel - 1)]  # [T, T]
+    scores = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * (d ** -0.5) + rab[None, None]
+    mask = qp[None, :, None] >= qp[None, None, :]  # causal
+    if max_attn_len is not None:
+        mask &= qp[None, :, None] - qp[None, None, :] < max_attn_len
+    if lengths is not None:
+        mask = mask & (qp[None, None, :] < lengths[:, None, None])
+    a = jax.nn.silu(scores) / t
+    a = jnp.where(mask[:, None, :, :], a, 0.0)
+    out = jnp.einsum("bhts,bshd->bthd", a, v.astype(jnp.float32))
+    return out.astype(q.dtype)

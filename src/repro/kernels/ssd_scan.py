@@ -1,0 +1,147 @@
+"""Pallas TPU Mamba-2 SSD kernel (chunked state-space duality).
+
+The SSD insight (arXiv:2405.21060): a scalar-decay SSM equals a 1-semi-
+separable masked attention — so each chunk of Q tokens runs as dense
+MXU-friendly GEMMs (the "attention-like" intra-chunk part) while a tiny
+[P, N] recurrent state carries across chunks. TPU mapping:
+
+- grid (B, H, T/Q): chunk dimension innermost and sequential; the running
+  state lives in VMEM scratch across grid steps (exactly the flash-
+  attention carry pattern — on GPUs this is a chunk-parallel scan+fixup,
+  on TPU the sequential grid makes the recurrence free);
+- per step: cumulative log-decays (VPU), C·Bᵀ and score·X GEMMs (MXU,
+  Q×Q×N / Q×Q×P), state update as two [Q,P]ᵀ·[Q,N]-shaped GEMMs;
+- chunk size Q defaults to 128 = MXU edge.
+
+The pure-XLA twin lives in kernels/ops.py (_ssd_chunked_xla); oracle in
+kernels/ref.py (sequential recurrence).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(
+    x_ref,  # [1, Q, 1, P]
+    dt_ref,  # [1, Q, 1]
+    A_ref,  # [1]
+    B_ref,  # [1, Q, 1, N]
+    C_ref,  # [1, Q, 1, N]
+    D_ref,  # [1]
+    h0_ref,  # [1, 1, P, N] initial state
+    y_ref,  # [1, Q, 1, P]
+    hT_ref,  # [1, 1, P, N] final state (written at last chunk)
+    state_scr,  # VMEM [P, N] f32
+    *,
+    n_chunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)  # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # [Q]
+    a = A_ref[0].astype(jnp.float32)  # scalar (negative)
+    b = B_ref[0, :, 0].astype(jnp.float32)  # [Q, N]
+    c = C_ref[0, :, 0].astype(jnp.float32)  # [Q, N]
+    d = D_ref[0].astype(jnp.float32)
+
+    log_decay = dt * a  # [Q], <= 0
+    cum = jnp.cumsum(log_decay)  # inclusive
+    q = x.shape[0]
+
+    # intra-chunk: scores[i,j] = (C_i·B_j) exp(cum_i - cum_j) dt_j, j <= i
+    cb = jax.lax.dot(c, b.T, preferred_element_type=jnp.float32)  # [Q, Q]
+    ldiff = cum[:, None] - cum[None, :]
+    causal = (
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    )
+    w = jnp.where(causal, cb * jnp.exp(ldiff), 0.0) * dt[None, :]
+    y_intra = jax.lax.dot(w, x, preferred_element_type=jnp.float32)  # [Q, P]
+
+    # inter-chunk: y_i += C_i · h_prev · exp(cum_i)
+    h_prev = state_scr[...]
+    y_inter = jax.lax.dot(c, h_prev.T, preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(cum)[:, None]
+
+    y_ref[0, :, 0] = (y_intra + y_inter + d * x).astype(y_ref.dtype)
+
+    # state update: h = exp(cum_T) h_prev + sum_j exp(cum_T - cum_j) dt_j x_j B_j^T
+    total = cum[-1]
+    sw = jnp.exp(total - cum) * dt  # [Q]
+    upd = jax.lax.dot(
+        (x * sw[:, None]).T, b, preferred_element_type=jnp.float32
+    )  # [P, N]
+    state_scr[...] = jnp.exp(total) * h_prev + upd
+
+    @pl.when(ic == n_chunks - 1)
+    def _final():
+        hT_ref[0, 0] = state_scr[...]
+
+
+def ssd_scan_pallas(
+    x: jnp.ndarray,  # [B, T, H, P]
+    dt: jnp.ndarray,  # [B, T, H]
+    A: jnp.ndarray,  # [H]
+    B_: jnp.ndarray,  # [B, T, G, N]
+    C: jnp.ndarray,  # [B, T, G, N]
+    D: jnp.ndarray,  # [H]
+    *,
+    chunk: int = 128,
+    initial_state: Optional[jnp.ndarray] = None,
+    interpret: bool = False,
+):
+    from jax.experimental.pallas import tpu as pltpu
+
+    b, t, h, p = x.shape
+    g, n = B_.shape[2], B_.shape[3]
+    rep = h // g
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tp = t + pad
+    n_chunks = tp // chunk
+    h0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=n_chunks)
+    grp = lambda ih: ih // rep  # head -> B/C group
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, chunk, 1, n), lambda ib, ih, ic: (ib, ic, ih // rep, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda ib, ih, ic: (ib, ic, ih // rep, 0)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, tp, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B_, C, D, h0)
+    return y[:, :t], hT

@@ -1,0 +1,368 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run (deliverable (e)).
+
+For every (architecture × input shape) pair this lowers + compiles the
+appropriate step program (train_step / prefill_step / serve_step) against
+the production mesh — 16×16 single pod and 2×16×16 multi-pod — using
+ShapeDtypeStruct inputs (no allocation), then records:
+
+- memory_analysis (per-device bytes: args/outputs/temps),
+- cost_analysis (FLOPs, bytes) for §Roofline,
+- the collective schedule parsed from the compiled HLO.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+
+Sharding mode flags (§Perf levers):
+  --cache-seq-shard   shard decode KV caches on the sequence axis ('model')
+  --fsdp              additionally shard params/opt over the data axis
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import (
+    ASSIGNED_ARCHS,
+    INPUT_SHAPES,
+    get_shape,
+    shape_supported,
+)
+from repro.distributed import sharding as sh
+from repro.launch import roofline as rl
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import get_model
+
+
+def _memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    )
+    return {k: getattr(ma, k, None) for k in keys if getattr(ma, k, None) is not None}
+
+
+def analytic_bytes_per_device(structs, spec_tree, mesh) -> float:
+    """Arg bytes per device from shardings (backup when the backend's
+    memory_analysis is unavailable, e.g. XLA:CPU)."""
+    total = 0.0
+    for leaf, spec in zip(
+        jax.tree.leaves(structs),
+        jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)),
+    ):
+        shards = 1
+        for axes in spec:
+            if axes is None:
+                continue
+            for a in axes if isinstance(axes, tuple) else (axes,):
+                shards *= mesh.shape[a]
+        total += leaf.size * leaf.dtype.itemsize / shards
+    return total
+
+
+def _compile_spec(spec, cfg, shape, mesh, *, cache_seq_shard, fsdp,
+                  enable_tp=None, pure_fsdp=False):
+    """Build shardings for a StepSpec and lower+compile it on ``mesh``."""
+    if pure_fsdp:
+        enable_tp = False
+    fsdp_axes = ("data", "model") if pure_fsdp else ("data",)
+    inc_model = pure_fsdp
+    pspecs = sh.param_specs(cfg, spec.arg_structs[0], mesh, enable_tp=enable_tp)
+    if fsdp or pure_fsdp:
+        pspecs = sh.fsdp_upgrade(cfg, spec.arg_structs[0], pspecs, mesh,
+                                 axes=fsdp_axes)
+    arg_specs = [pspecs]
+    if shape.kind == "train":
+        ospecs = sh.opt_state_specs(
+            cfg, spec.arg_structs[1], mesh, enable_tp=enable_tp
+        )
+        if fsdp or pure_fsdp:
+            ospecs = sh.fsdp_upgrade(cfg, spec.arg_structs[1], ospecs, mesh,
+                                     axes=fsdp_axes)
+        arg_specs.append(ospecs)
+        arg_specs.append(
+            jax.tree.map(
+                lambda s: sh.batch_spec(mesh, shape.global_batch, s.ndim,
+                                        include_model=inc_model),
+                spec.arg_structs[2],
+            )
+        )
+    elif shape.kind == "prefill":
+        arg_specs.append(
+            jax.tree.map(
+                lambda s: sh.batch_spec(mesh, shape.global_batch, s.ndim,
+                                        include_model=inc_model),
+                spec.arg_structs[1],
+            )
+        )
+    else:  # decode
+        mk = sh.cache_specs_seqsharded if cache_seq_shard else sh.cache_specs
+        arg_specs.append(mk(cfg, spec.arg_structs[1], mesh, shape.global_batch))
+        arg_specs.append(sh.batch_spec(mesh, shape.global_batch, 2))
+
+    in_shardings = tuple(sh.to_shardings(mesh, s) for s in arg_specs)
+    with mesh:
+        jitted = jax.jit(
+            spec.fn, in_shardings=in_shardings, donate_argnums=spec.donate
+        )
+        lowered = jitted.lower(*spec.arg_structs)
+        compiled = lowered.compile()
+    return compiled, arg_specs
+
+
+def _extrapolated_costs(arch, shape, cfg, mesh, *, cache_seq_shard, fsdp,
+                        quant=None, enable_tp=None, pure_fsdp=False):
+    """XLA's cost_analysis counts a lax.scan (while-loop) body ONCE
+    regardless of trip count, so scanned-layer models under-report. Fix:
+    compile unrolled variants at npre+1 and npre+2 layers (cheap) and
+    linearly extrapolate flops / bytes / collective-bytes to n_layers —
+    per-layer costs are exactly linear in depth."""
+    from repro.models import transformer
+
+    npre = transformer._n_prefix_layers(cfg.replace(scan_layers=True))
+    if enable_tp is None:
+        enable_tp = cfg.n_params() >= sh.TP_MIN_PARAMS  # decide on FULL depth
+    samples = []
+    for nl in (npre + 1, npre + 2):
+        rcfg = cfg.replace(n_layers=nl, scan_layers=False, remat=False)
+        rspec = sp.make_step_spec(arch, shape, cfg=rcfg, quant=quant)
+        compiled, _ = _compile_spec(
+            rspec, rcfg, shape, mesh, cache_seq_shard=cache_seq_shard,
+            fsdp=fsdp, enable_tp=enable_tp, pure_fsdp=pure_fsdp,
+        )
+        cost = dict(compiled.cost_analysis() or {})
+        colls = rl.collective_bytes(compiled.as_text())
+        samples.append((cost, colls))
+    (c1, k1), (c2, k2) = samples
+    n_extra = cfg.n_layers - (npre + 2)
+
+    def lerp_costs(key):
+        b = c2.get(key, 0.0) - c1.get(key, 0.0)
+        return c2.get(key, 0.0) + n_extra * b
+
+    cost = {
+        "flops": lerp_costs("flops"),
+        "bytes accessed": lerp_costs("bytes accessed"),
+    }
+    colls = {}
+    for kind in set(k1) | set(k2):
+        b = k2.get(kind, 0.0) - k1.get(kind, 0.0)
+        colls[kind] = max(k2.get(kind, 0.0) + n_extra * b, 0.0)
+    return cost, colls
+
+
+def run_pair(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    cache_seq_shard: bool = False,
+    fsdp: bool = False,
+    no_tp: bool = False,
+    quant: str = None,
+    moe_sort: bool = False,
+    moe_ep: bool = False,
+    seq_parallel: bool = False,
+    decode_sp: bool = False,
+    pure_fsdp: bool = False,
+    xla_sliced: bool = False,
+    verbose: bool = True,
+) -> dict:
+    shape = get_shape(shape_name)
+    supported, reason = shape_supported(arch, shape)
+    if not supported:
+        return {
+            "arch": arch, "shape": shape_name, "status": "skipped",
+            "reason": reason,
+        }
+
+    cfg = sp.dryrun_config(arch, shape)
+    if moe_sort and cfg.moe is not None:
+        import dataclasses
+
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch_rank="sort"))
+    if moe_ep:
+        from repro.models import moe as moe_mod
+
+        moe_mod.EP_MESH = make_production_mesh(multi_pod=multi_pod)
+    if decode_sp:
+        from repro.models import attention as attn_mod
+
+        attn_mod.SP_MESH = make_production_mesh(multi_pod=multi_pod)
+        cache_seq_shard = True  # shard_map in_specs require the S axis sharded
+    if seq_parallel:
+        from jax.sharding import PartitionSpec as _P
+
+        from repro.models import transformer as tr_mod
+
+        daxes = ("pod", "data") if multi_pod else ("data",)
+        tr_mod.SEQ_PARALLEL_SPEC = _P(daxes, "model", None)
+    if xla_sliced:
+        from repro.kernels import ops as ops_mod
+
+        ops_mod.XLA_FLASH_LAYOUT = "sliced"
+    if seq_parallel:
+        cfg = cfg.replace(seq_parallel=True)
+    enable_tp = False if no_tp else None
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.devices.size
+    spec = sp.make_step_spec(arch, shape, cfg=cfg, quant=quant)
+
+    t0 = time.perf_counter()
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": int(chips), "step": spec.name.split(":")[-1],
+        "flags": {
+            "cache_seq_shard": cache_seq_shard, "fsdp": fsdp, "no_tp": no_tp,
+            "quant": quant, "moe_sort": moe_sort, "moe_ep": moe_ep,
+            "seq_parallel": seq_parallel, "decode_sp": decode_sp,
+            "pure_fsdp": pure_fsdp,
+        },
+    }
+    try:
+        compiled, arg_specs = _compile_spec(
+            spec, cfg, shape, mesh, cache_seq_shard=cache_seq_shard,
+            fsdp=fsdp, enable_tp=enable_tp, pure_fsdp=pure_fsdp,
+        )
+        t_compile = time.perf_counter() - t0
+    except Exception as e:
+        result["status"] = "FAILED"
+        result["error"] = f"{type(e).__name__}: {e}"
+        if verbose:
+            print(f"[dryrun] {spec.name} {mesh_name} FAILED: {result['error']}")
+            traceback.print_exc()
+        return result
+
+    mem = _memory_analysis_dict(compiled)
+    notes = ""
+    if cfg.scan_layers:
+        # scan bodies are cost-counted once: extrapolate from unrolled
+        # reduced-depth compiles (exactly linear in layer count)
+        try:
+            cost, colls_fixed = _extrapolated_costs(
+                arch, shape, cfg, mesh,
+                cache_seq_shard=cache_seq_shard, fsdp=fsdp, quant=quant,
+                enable_tp=enable_tp, pure_fsdp=pure_fsdp,
+            )
+            hlo = compiled.as_text()
+            report = rl.analyze(
+                arch=arch, shape=shape, cfg=cfg, mesh_name=mesh_name,
+                chips=chips, cost=cost, hlo_text=hlo,
+                notes="costs extrapolated over scan depth",
+            )
+            report.collectives = colls_fixed
+            report.collective_bytes_per_device = sum(
+                rl._WEIGHT[k] * v for k, v in colls_fixed.items()
+            )
+            notes = "depth-extrapolated"
+        except Exception as e:  # fall back to raw (under-counted) costs
+            cost = dict(compiled.cost_analysis() or {})
+            report = rl.analyze(
+                arch=arch, shape=shape, cfg=cfg, mesh_name=mesh_name,
+                chips=chips, cost=cost, hlo_text=compiled.as_text(),
+                notes=f"raw scan costs (extrapolation failed: {e})",
+            )
+    else:
+        cost = dict(compiled.cost_analysis() or {})
+        report = rl.analyze(
+            arch=arch, shape=shape, cfg=cfg, mesh_name=mesh_name, chips=chips,
+            cost=cost, hlo_text=compiled.as_text(),
+        )
+    arg_bytes = analytic_bytes_per_device(spec.arg_structs, tuple(arg_specs), mesh)
+    t_lower = 0.0
+
+    result.update(
+        {
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory_analysis": mem,
+            "arg_bytes_per_device": arg_bytes,
+            "roofline": report.to_dict(),
+        }
+    )
+    if verbose:
+        ici = ", ".join(f"{k}={v/1e6:.1f}MB" for k, v in report.collectives.items())
+        print(
+            f"[dryrun] {spec.name:48s} {mesh_name} OK "
+            f"lower {t_lower:5.1f}s compile {t_compile:6.1f}s | "
+            f"args/dev {arg_bytes/1e9:6.2f}GB | {report.row()} | {ici}"
+        )
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--cache-seq-shard", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--no-tp", action="store_true")
+    ap.add_argument("--quant", default=None, choices=["wo", "dyn"])
+    ap.add_argument("--moe-sort", action="store_true")
+    ap.add_argument("--moe-ep", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--decode-sp", action="store_true")
+    ap.add_argument("--pure-fsdp", action="store_true")
+    ap.add_argument("--xla-sliced", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    pairs = []
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    for a in archs:
+        for s in shapes:
+            pairs.append((a, s))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    for mp in meshes:
+        for a, s in pairs:
+            results.append(
+                run_pair(
+                    a, s, multi_pod=mp,
+                    cache_seq_shard=args.cache_seq_shard, fsdp=args.fsdp,
+                    no_tp=args.no_tp, quant=args.quant,
+                    moe_sort=args.moe_sort, moe_ep=args.moe_ep,
+                    seq_parallel=args.seq_parallel, decode_sp=args.decode_sp,
+                    pure_fsdp=args.pure_fsdp, xla_sliced=args.xla_sliced,
+                )
+            )
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = sum(r["status"] == "FAILED" for r in results)
+    print(f"[dryrun] ok={n_ok} skipped={n_skip} FAILED={n_fail}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,98 @@
+"""Render dry-run JSON results into the EXPERIMENTS.md markdown tables.
+
+  PYTHONPATH=src python -m repro.launch.report results/dryrun_*.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    if b >= 1e12:
+        return f"{b / 1e12:.2f}TB"
+    if b >= 1e9:
+        return f"{b / 1e9:.2f}GB"
+    return f"{b / 1e6:.1f}MB"
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}us"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def table(results: List[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | step | compile | args/dev | t_compute | "
+        "t_memory | t_collective | bottleneck | useful | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | - | - | SKIP | - | - | - | - | "
+                f"{r['reason']} | - | - |"
+            )
+            continue
+        if r["status"] == "FAILED":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r.get('mesh', '?')} | "
+                f"{r.get('step', '?')} | **FAIL** | - | - | - | - | "
+                f"{r.get('error', '')[:60]} | - | - |"
+            )
+            continue
+        rf = r["roofline"]
+        fits = "yes" if r["arg_bytes_per_device"] < 16 * 1024 ** 3 else "**NO**"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['step']} | "
+            f"{r['compile_s']:.0f}s | {fmt_bytes(r['arg_bytes_per_device'])} | "
+            f"{fmt_s(rf['t_compute'])} | {fmt_s(rf['t_memory'])} | "
+            f"{fmt_s(rf['t_collective'])} | **{rf['bottleneck']}** | "
+            f"{rf['useful_ratio']:.2f} | {fits} |"
+        )
+    return "\n".join(lines)
+
+
+def collectives_table(results: List[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | all-reduce | all-gather | reduce-scatter | "
+        "all-to-all | collective-permute |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if r["status"] != "ok":
+            continue
+        c = r["roofline"]["collectives"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            + " | ".join(
+                fmt_bytes(c.get(k, 0) or None)
+                for k in ("all-reduce", "all-gather", "reduce-scatter",
+                          "all-to-all", "collective-permute")
+            )
+            + " |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    results = []
+    for path in sys.argv[1:]:
+        with open(path) as f:
+            results.extend(json.load(f))
+    print(table(results))
+    print()
+    print("### Collective schedule (bytes per device per step)\n")
+    print(collectives_table(results))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable (g)).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s          (197 TF/s bf16)
+  memory     = HLO_bytes_per_device / HBM_bw               (819 GB/s)
+  collective = collective_bytes_per_device / link_bw       (~50 GB/s/link)
+
+Sources: ``compiled.cost_analysis()`` gives per-device FLOPs and bytes
+(the module is the SPMD-partitioned per-device program).
+collective_bytes is parsed from the compiled HLO text: we sum the shaped
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, weighting all-reduce 2× (reduce-scatter+all-gather
+under the hood on ICI rings).
+
+Also reported: MODEL_FLOPS (6·N·D train / 2·N·D prefill / 2·N_active·B
+decode) and the useful-compute ratio MODEL_FLOPS / (HLO_FLOPs × chips),
+which catches remat recompute and dispatch waste.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.launch.mesh import HW
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _line_result_bytes(line: str) -> float:
+    """Bytes of the result shape(s) on an HLO line '%x = <shape> op(...)'."""
+    lhs = line.split("=", 1)[1]
+    op_pos = len(lhs)
+    m = re.search(
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+        lhs,
+    )
+    if m:
+        op_pos = m.start()
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(lhs[:op_pos]):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_WEIGHT = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,  # RS + AG on a ring
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes per collective kind (per-device program).
+    '-start' variants are counted; '-done' are skipped (same transfer)."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "=" not in line:
+            continue
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        out[kind] = out.get(kind, 0.0) + _line_result_bytes(line)
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    n_active = cfg.n_active_params()
+    n_total = cfg.n_params()
+    if shape.kind == "train":
+        return 6.0 * n_total * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token per slot
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+    collectives: Dict[str, float]
+    model_flops_total: float
+    notes: str = ""
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops_per_device / HW["peak_flops_bf16"]
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes_per_device / HW["hbm_bw"]
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / HW["ici_bw"]
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.hlo_flops_per_device * self.chips
+        return self.model_flops_total / total if total else float("nan")
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step-time estimate: dominant term (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def row(self) -> str:
+        return (
+            f"{self.arch:18s} {self.shape:12s} {self.mesh:10s} "
+            f"c={self.t_compute:9.3e}s m={self.t_memory:9.3e}s "
+            f"n={self.t_collective:9.3e}s -> {self.bottleneck:10s} "
+            f"useful={self.useful_ratio:6.2f}"
+        )
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops_per_device": self.hlo_flops_per_device,
+            "hlo_bytes_per_device": self.hlo_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collectives": self.collectives,
+            "model_flops_total": self.model_flops_total,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio, "step_time": self.step_time,
+            "notes": self.notes,
+        }
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: InputShape,
+    cfg: ModelConfig,
+    mesh_name: str,
+    chips: int,
+    cost: Dict[str, float],
+    hlo_text: str,
+    notes: str = "",
+) -> RooflineReport:
+    colls = collective_bytes(hlo_text)
+    return RooflineReport(
+        arch=arch,
+        shape=shape.name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops_per_device=float(cost.get("flops", 0.0)),
+        hlo_bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes_per_device=sum(
+            _WEIGHT[k] * v for k, v in colls.items()
+        ),
+        collectives=colls,
+        model_flops_total=model_flops(cfg, shape),
+        notes=notes,
+    )

@@ -1,0 +1,139 @@
+"""Per-(arch × shape) abstract input specs and step functions for the
+multi-pod dry-run: ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) plus the jit-able step function each shape
+kind lowers:
+
+- train_*:    train_step(params, opt_state, batch)
+- prefill_*:  prefill_step(params, batch) -> (last_logits, filled cache)
+- decode_*:   serve_step(params, cache, token) -> (logits, cache) — ONE new
+              token against a seq_len KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import InputShape, config_for_shape, get_config
+from repro.configs.base import ModelConfig
+from repro.models.registry import Model, get_model
+from repro.training import optimizer as opt
+from repro.training.train_loop import make_train_step
+
+SCANNABLE = ("dense", "moe", "mla_moe", "vlm")
+
+
+def dryrun_config(arch: str, shape: InputShape) -> ModelConfig:
+    """Resolve the config lowered for (arch, shape): sliding-window swap
+    for long_500k, scan-over-layers for deep transformer stacks, remat for
+    training shapes (compile-scale + activation-memory discipline)."""
+    cfg = config_for_shape(arch, shape)
+    if cfg.family in SCANNABLE:
+        cfg = cfg.replace(scan_layers=True, remat=shape.kind == "train")
+    return cfg
+
+
+def st(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@dataclass
+class StepSpec:
+    name: str
+    fn: Callable  # positional args match arg_structs
+    arg_structs: Tuple[Any, ...]
+    donate: Tuple[int, ...] = ()
+    # filled by launch.dryrun
+    notes: str = ""
+
+
+def _enc_token_len(cfg: ModelConfig, seq: int) -> int:
+    return min(seq, cfg.encdec.max_target_len)
+
+
+def _train_batch_structs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        t = _enc_token_len(cfg, s)
+        return {
+            "tokens": st((b, t)),
+            "labels": st((b, t)),
+            "frames": st((b, cfg.encdec.n_frames, cfg.d_model), jnp.bfloat16),
+        }
+    return {"tokens": st((b, s)), "labels": st((b, s))}
+
+
+def make_step_spec(
+    arch: str,
+    shape: InputShape,
+    *,
+    cfg: Optional[ModelConfig] = None,
+    opt_cfg: Optional[opt.OptimizerConfig] = None,
+    quant: Optional[str] = None,  # None | "wo" | "dyn": AutoQuant'd params
+) -> StepSpec:
+    cfg = cfg or dryrun_config(arch, shape)
+    model = get_model(cfg)
+    b, s = shape.global_batch, shape.seq_len
+
+    def _params_st():
+        p = model.abstract_params()
+        if quant:
+            from repro.core.quantization import quantize_params
+
+            p = jax.eval_shape(lambda q: quantize_params(q, quant), p)
+        return p
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or opt.OptimizerConfig()
+        params_st = model.abstract_params()  # training stays bf16
+        opt_st = jax.eval_shape(lambda: opt.init_state(params_st, opt_cfg))
+        step = make_train_step(model, opt_cfg)
+        return StepSpec(
+            name=f"{arch}:{shape.name}:train_step",
+            fn=step,
+            arg_structs=(params_st, opt_st, _train_batch_structs(cfg, shape)),
+            donate=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        params_st = _params_st()
+        t = _enc_token_len(cfg, s) if cfg.family == "encdec" else s
+
+        def prefill_step(params, batch):
+            cache = model.init_cache(b, t + 1)
+            logits, cache, _ = model.forward(
+                params, batch, cache=cache, mode="prefill"
+            )
+            return logits[:, -1], cache
+
+        batch_st: Dict[str, Any] = {"tokens": st((b, t))}
+        if cfg.family == "encdec":
+            batch_st["frames"] = st((b, cfg.encdec.n_frames, cfg.d_model), jnp.bfloat16)
+        return StepSpec(
+            name=f"{arch}:{shape.name}:prefill_step",
+            fn=prefill_step,
+            arg_structs=(params_st, batch_st),
+        )
+
+    # decode: ONE token against a seq_len cache
+    params_st = _params_st()
+    cache_len = s
+    if cfg.family == "encdec":
+        cache_len = min(s, cfg.encdec.max_target_len)
+    cache_st = model.abstract_cache(b, cache_len)
+
+    def serve_step(params, cache, token):
+        logits, cache, _ = model.forward(
+            params, {"tokens": token}, cache=cache, mode="decode"
+        )
+        return logits[:, 0], cache
+
+    return StepSpec(
+        name=f"{arch}:{shape.name}:serve_step",
+        fn=serve_step,
+        arg_structs=(params_st, cache_st, st((b, 1))),
+        donate=(1,),
+    )

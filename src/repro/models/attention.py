@@ -1,0 +1,387 @@
+"""Unified attention block: GQA (optionally windowed / qk-norm / bias) and
+DeepSeek-V2 MLA, with static-KV-cache integration.
+
+Cache discipline (the paper's CUDA-Graph enabler, §4.1.2, adapted to JAX):
+buffers are allocated once at a static max length; per-slot ``lengths``
+counters select the write position; decode attends under a validity mask.
+A sliding-window config turns the buffer into a ring (size = window).
+
+Modes:
+- ``train``:   no cache; full causal flash attention.
+- ``prefill``: writes the prompt's K/V into the cache (slot-aligned) and
+               attends causally over the in-flight K/V.
+- ``decode``:  one token per slot; vmapped dynamic_update_slice write at
+               ``lengths % cache_len``; decode attention over the cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+#: When set (by the launcher/dry-run --decode-sp), the decode path runs
+#: sequence-parallel under shard_map: the KV cache shards its SEQUENCE
+#: axis over 'model', each device computes flash-decode partials on its
+#: shard, and an LSE-combine merges them — instead of GSPMD all-gathering
+#: the whole cache (the §Perf-measured 270GB/step pathology on 405B).
+SP_MESH: Optional[Mesh] = None
+
+
+# --------------------------------------------------------------------------
+# cache write helpers
+# --------------------------------------------------------------------------
+
+def write_prefill(buf: jnp.ndarray, new: jnp.ndarray) -> jnp.ndarray:
+    """Write [B, T, ...] into [B, S, ...] at offset 0 (ring-aware: if
+    T > S, keeps the last S entries at their ring slots)."""
+    s, t = buf.shape[1], new.shape[1]
+    if t <= s:
+        pad = [(0, 0), (0, s - t)] + [(0, 0)] * (buf.ndim - 2)
+        return jnp.pad(new, pad) if t < s else new
+    # ring: keep last S tokens; token t sits at slot t % S
+    tail = new[:, t - s:]
+    slots = (jnp.arange(t - s, t)) % s
+    return buf.at[:, slots].set(tail)
+
+
+def write_decode(buf: jnp.ndarray, new: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Write one entry per batch row: buf [B,S,...], new [B,...], idx [B]."""
+
+    def one(b, n, i):
+        return jax.lax.dynamic_update_slice(b, n[None], (i,) + (0,) * (b.ndim - 1))
+
+    return jax.vmap(one)(buf, new, idx)
+
+
+def write_extend(buf: jnp.ndarray, new: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Write a [B, T, ...] block at per-batch offsets idx [B] (contiguous,
+    non-ring; used by speculative/LayerSkip verification windows)."""
+
+    def one(b, n, i):
+        return jax.lax.dynamic_update_slice(b, n, (i,) + (0,) * (b.ndim - 1))
+
+    return jax.vmap(one)(buf, new, idx)
+
+
+def valid_counts(lengths: jnp.ndarray, cache_len: int) -> jnp.ndarray:
+    return jnp.minimum(lengths, cache_len)
+
+
+def _sp_decode(cache, k_new, v_new, q, lengths):
+    """Sequence-parallel flash decode under shard_map.
+
+    Cache K/V [B, S, Hkv, D] shard the S axis over 'model'; each device:
+    (1) writes the new token's K/V iff it owns slot ``lengths``,
+    (2) computes flash-decode partials (acc, m, l) over its local shard,
+    (3) all-gathers the tiny per-head partials and LSE-combines.
+    Collective cost per layer: 3 × [B, Hq, (D+2)] floats instead of the
+    GSPMD baseline's full-cache all-gather.
+    """
+    mesh = SP_MESH
+    msize = mesh.shape["model"]
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = daxes if daxes else None
+    kv_spec = P(bspec, "model", None, None)
+    vec_spec = P(bspec, None, None)
+
+    def local(ck, cv, kn, vn, qv, ln):
+        s_loc = ck.shape[1]
+        shard = jax.lax.axis_index("model")
+        local_idx = ln - shard * s_loc
+        in_range = (local_idx >= 0) & (local_idx < s_loc)
+        wi = jnp.clip(local_idx, 0, s_loc - 1)
+        # conditional single-row write: non-owners rewrite the row they
+        # already hold (a full-buffer where() would triple cache traffic —
+        # §Perf round 2 measured it at ~3x the live bytes)
+        def row_at(buf, i):
+            return jax.vmap(
+                lambda b, j: jax.lax.dynamic_slice(
+                    b, (j,) + (0,) * (b.ndim - 1), (1,) + b.shape[1:]
+                )[0]
+            )(buf, i)
+
+        sel = in_range[:, None, None]
+        ck2 = write_decode(ck, jnp.where(sel, kn, row_at(ck, wi)), wi)
+        cv2 = write_decode(cv, jnp.where(sel, vn, row_at(cv, wi)), wi)
+
+        base = shard * s_loc
+        n_valid = ln + 1
+        k_valid = (base + jnp.arange(s_loc))[None, :] < n_valid[:, None]
+        acc, m, l = ops.decode_attention_partial(qv, ck2, cv2, k_valid)
+        accs = jax.lax.all_gather(acc, "model")  # [msize, B, Hq, D]
+        ms = jax.lax.all_gather(m, "model")
+        ls = jax.lax.all_gather(l, "model")
+        out = ops.combine_partial_attention(accs, ms, ls)
+        return out.astype(qv.dtype), ck2, cv2
+
+    from jax.experimental.shard_map import shard_map
+
+    out, ck2, cv2 = shard_map(
+        local, mesh=mesh,
+        in_specs=(kv_spec, kv_spec, vec_spec, vec_spec, vec_spec, P(bspec)),
+        out_specs=(vec_spec, kv_spec, kv_spec),
+        check_rep=False,
+    )(cache["k"], cache["v"], k_new, v_new, q, lengths)
+    return out, {"k": ck2, "v": cv2}
+
+
+# --------------------------------------------------------------------------
+# standard GQA attention
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    dt = L.param_dtype(cfg)
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], d, hq * dh, dt, bias=cfg.qkv_bias),
+        "wk": L.dense_init(ks[1], d, hkv * dh, dt, bias=cfg.qkv_bias),
+        "wv": L.dense_init(ks[2], d, hkv * dh, dt, bias=cfg.qkv_bias),
+        "wo": L.dense_init(ks[3], hq * dh, d, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(dh, dt)
+        p["k_norm"] = L.rmsnorm_init(dh, dt)
+    return p
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int, window=None):
+    dt = L.param_dtype(cfg)
+    s = min(max_len, window) if window else max_len
+    shape = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def attention(
+    cfg: ModelConfig,
+    p,
+    x: jnp.ndarray,  # [B, T, d]
+    *,
+    positions: jnp.ndarray,  # [B, T]
+    lengths: Optional[jnp.ndarray],  # [B] context size BEFORE this call
+    cache: Optional[dict],
+    mode: str,
+    window: Optional[int] = None,
+    impl: str = "auto",
+    bidirectional: bool = False,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, t, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = L.dense(p["wq"], x).reshape(b, t, hq, dh)
+    k = L.dense(p["wk"], x).reshape(b, t, hkv, dh)
+    v = L.dense(p["wv"], x).reshape(b, t, hkv, dh)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q, cfg.rmsnorm_eps)
+        k = L.rmsnorm(p["k_norm"], k, cfg.rmsnorm_eps)
+    if not bidirectional:  # encoder stacks skip RoPE (whisper uses sinusoid)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    if mode == "train" or (mode == "prefill" and cache is None):
+        out = ops.flash_attention(
+            q, k, v, q_positions=positions, k_positions=positions,
+            causal=not bidirectional, window=window, impl=impl,
+        )
+        new_cache = None
+    elif mode == "prefill":
+        new_cache = {
+            "k": write_prefill(cache["k"], k),
+            "v": write_prefill(cache["v"], v),
+        }
+        out = ops.flash_attention(
+            q, k, v, q_positions=positions, k_positions=positions,
+            causal=not bidirectional, window=window, impl=impl,
+        )
+    elif mode == "decode":
+        if SP_MESH is not None and window is None:
+            out, new_cache = _sp_decode(cache, k[:, 0], v[:, 0], q[:, 0], lengths)
+            out = out[:, None]
+        else:
+            s = cache["k"].shape[1]
+            idx = lengths % s
+            new_cache = {
+                "k": write_decode(cache["k"], k[:, 0], idx),
+                "v": write_decode(cache["v"], v[:, 0], idx),
+            }
+            n_valid = valid_counts(lengths + 1, s)
+            out = ops.decode_attention(
+                q[:, 0], new_cache["k"], new_cache["v"], n_valid, impl=impl
+            )[:, None]
+    elif mode == "extend":
+        s = cache["k"].shape[1]
+        if window is not None:
+            # extend over a ring buffer would need wraparound scatter;
+            # speculative windows are short — engines exclude ring archs.
+            raise NotImplementedError("extend unsupported on ring/window caches")
+        new_cache = {
+            "k": write_extend(cache["k"], k, lengths),
+            "v": write_extend(cache["v"], v, lengths),
+        }
+        kpos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        k_valid = jnp.arange(s)[None] < (lengths + t)[:, None]
+        out = ops.flash_attention(
+            q, new_cache["k"], new_cache["v"], q_positions=positions,
+            k_positions=kpos, causal=not bidirectional, window=window,
+            k_valid=k_valid, impl=impl,
+        )
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    return L.dense(p["wo"], out.reshape(b, t, hq * dh)), new_cache
+
+
+# --------------------------------------------------------------------------
+# DeepSeek-V2 Multi-head Latent Attention
+# --------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig):
+    m = cfg.mla
+    dt = L.param_dtype(cfg)
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "kv_down": L.dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_dim, dt),
+        "kv_norm": L.rmsnorm_init(m.kv_lora_rank, dt),
+        "kv_up": L.dense_init(
+            ks[3], m.kv_lora_rank, h * (m.qk_nope_dim + m.v_head_dim), dt
+        ),
+        "wo": L.dense_init(ks[4], h * m.v_head_dim, d, dt),
+    }
+    if m.q_lora_rank > 0:
+        p["q_down"] = L.dense_init(ks[0], d, m.q_lora_rank, dt)
+        p["q_norm"] = L.rmsnorm_init(m.q_lora_rank, dt)
+        p["q_up"] = L.dense_init(
+            ks[1], m.q_lora_rank, h * (m.qk_nope_dim + m.qk_rope_dim), dt
+        )
+    else:
+        p["q_up"] = L.dense_init(ks[1], d, h * (m.qk_nope_dim + m.qk_rope_dim), dt)
+    return p
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Single fused latent buffer [B, S, kv_lora + rope]: the absorbed
+    decode's K is the whole buffer and its V is the [:kv_lora] slice — a
+    separate (c_kv, k_rope) pair forced a full-cache concat every decode
+    step (§Perf P4)."""
+    m = cfg.mla
+    dt = L.param_dtype(cfg)
+    return {
+        "latent": jnp.zeros((batch, max_len, m.kv_lora_rank + m.qk_rope_dim), dt),
+    }
+
+
+def _mla_qkv(cfg, p, x, positions):
+    """Shared query path + latent K/V computation."""
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    if "q_down" in p:
+        cq = L.rmsnorm(p["q_norm"], L.dense(p["q_down"], x), cfg.rmsnorm_eps)
+    else:
+        cq = x
+    qall = L.dense(p["q_up"], cq).reshape(b, t, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(qall, [m.qk_nope_dim], axis=-1)
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = L.dense(p["kv_down"], x)
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = L.rmsnorm(p["kv_norm"], c_kv, cfg.rmsnorm_eps)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_expand_kv(cfg, p, c_kv):
+    """Up-project latents to per-head K_nope / V (prefill/train path)."""
+    m = cfg.mla
+    b, s, _ = c_kv.shape
+    h = cfg.n_heads
+    kv = L.dense(p["kv_up"], c_kv).reshape(b, s, h, m.qk_nope_dim + m.v_head_dim)
+    return jnp.split(kv, [m.qk_nope_dim], axis=-1)  # k_nope, v
+
+
+def mla_attention(
+    cfg: ModelConfig,
+    p,
+    x: jnp.ndarray,
+    *,
+    positions: jnp.ndarray,
+    lengths: Optional[jnp.ndarray],
+    cache: Optional[dict],
+    mode: str,
+    impl: str = "auto",
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
+
+    if mode in ("train", "prefill"):
+        k_nope, v = _mla_expand_kv(cfg, p, c_kv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, t, h, m.qk_rope_dim))],
+            axis=-1,
+        )
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = ops.flash_attention(
+            q, k, v, q_positions=positions, k_positions=positions,
+            causal=True, scale=scale, impl=impl,
+        )
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            new_cache = {
+                "latent": write_prefill(
+                    cache["latent"], jnp.concatenate([c_kv, k_rope], axis=-1)
+                ),
+            }
+    elif mode in ("decode", "extend"):
+        s = cache["latent"].shape[1]
+        latent_new = jnp.concatenate([c_kv, k_rope], axis=-1)  # tiny: [B,T,r+rope]
+        if mode == "decode":
+            idx = lengths % s
+            new_cache = {
+                "latent": write_decode(cache["latent"], latent_new[:, 0], idx),
+            }
+        else:
+            new_cache = {
+                "latent": write_extend(cache["latent"], latent_new, lengths),
+            }
+        # Absorbed attention (DeepSeek-V2 §2.1): fold kv_up's K-half into
+        # the query so attention runs directly against the latent cache —
+        # scores = [q_nope W_uk ; q_rope] . [c_kv ; k_rope]. The latent
+        # plays the role of a single shared KV "head" (Hkv=1 GQA).
+        w_up = p["kv_up"]["w"].reshape(m.kv_lora_rank, h, m.qk_nope_dim + m.v_head_dim)
+        w_uk = w_up[:, :, : m.qk_nope_dim]  # [r, H, nope]
+        w_uv = w_up[:, :, m.qk_nope_dim:]  # [r, H, v]
+        q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, w_uk)  # [B,T,H,r]
+        q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)  # [B,T,H,r+rope]
+        k_eff = new_cache["latent"]  # K = whole latent buffer (no copy)
+        v_eff = new_cache["latent"][:, :, : m.kv_lora_rank]  # V = slice
+        if mode == "decode":
+            n_valid = valid_counts(lengths + 1, s)
+            ctx_lat = ops.decode_attention(
+                q_eff[:, 0], k_eff[:, :, None, :], v_eff[:, :, None, :],
+                n_valid, scale=scale, impl=impl,
+            )[:, None]  # [B,1,H,r]
+        else:
+            kpos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            k_valid = jnp.arange(s)[None] < (lengths + t)[:, None]
+            ctx_lat = ops.flash_attention(
+                q_eff, k_eff[:, :, None, :], v_eff[:, :, None, :],
+                q_positions=positions, k_positions=kpos, causal=True,
+                k_valid=k_valid, scale=scale, impl=impl,
+            )  # [B,T,H,r]
+        out = jnp.einsum(
+            "bthr,rhv->bthv", ctx_lat.astype(jnp.float32), w_uv.astype(jnp.float32)
+        ).astype(x.dtype)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    return L.dense(p["wo"], out.reshape(b, t, h * m.v_head_dim)), new_cache

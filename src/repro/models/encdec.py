@@ -1,0 +1,206 @@
+"""Whisper-style encoder-decoder (the paper's Seamless analogue, §2.1.3).
+
+The mel-spectrogram + conv frontend is STUBBED (the allowed carve-out):
+the encoder consumes precomputed frame embeddings [B, n_frames, d_model].
+Everything downstream is real: bidirectional encoder, autoregressive
+decoder with self-attention KV cache AND cross-attention KV cache
+(computed once at prefill — reproducing Seamless's "only the text decoder
+is autoregressive" profile, paper Obs #2), plus beam-search serving with
+the paper's Obs #4 KV-reorder lever (see core/sampling.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import attention as A
+from repro.models import layers as L
+
+
+def init_encoder_layer(key, cfg: ModelConfig):
+    ka, kf = jax.random.split(key)
+    dt = L.param_dtype(cfg)
+    return {
+        "attn_norm": L.rmsnorm_init(cfg.d_model, dt),
+        "attn": A.init_attention(ka, cfg),
+        "ffn_norm": L.rmsnorm_init(cfg.d_model, dt),
+        "ffn": L.ffn_init(kf, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def init_decoder_layer(key, cfg: ModelConfig):
+    ka, kx, kf = jax.random.split(key, 3)
+    dt = L.param_dtype(cfg)
+    return {
+        "self_norm": L.rmsnorm_init(cfg.d_model, dt),
+        "self_attn": A.init_attention(ka, cfg),
+        "cross_norm": L.rmsnorm_init(cfg.d_model, dt),
+        "cross_attn": A.init_attention(kx, cfg),
+        "ffn_norm": L.rmsnorm_init(cfg.d_model, dt),
+        "ffn": L.ffn_init(kf, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def init(cfg: ModelConfig, key):
+    ed = cfg.encdec
+    ks = jax.random.split(key, ed.n_encoder_layers + cfg.n_layers + 3)
+    dt = L.param_dtype(cfg)
+    return {
+        "embed": L.embedding_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "lm_head": L.dense_init(ks[1], cfg.d_model, cfg.vocab_size, dt),
+        "enc_norm": L.rmsnorm_init(cfg.d_model, dt),
+        "dec_norm": L.rmsnorm_init(cfg.d_model, dt),
+        "encoder": [
+            init_encoder_layer(ks[2 + i], cfg) for i in range(ed.n_encoder_layers)
+        ],
+        "decoder": [
+            init_decoder_layer(ks[2 + ed.n_encoder_layers + i], cfg)
+            for i in range(cfg.n_layers)
+        ],
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    ed = cfg.encdec
+    dt = L.param_dtype(cfg)
+    max_len = min(max_len, ed.max_target_len)
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(
+            {
+                "self": A.init_attention_cache(cfg, batch, max_len),
+                # cross K/V over encoder frames, written once at prefill
+                "cross_k": jnp.zeros((batch, ed.n_frames, cfg.n_kv_heads, cfg.head_dim), dt),
+                "cross_v": jnp.zeros((batch, ed.n_frames, cfg.n_kv_heads, cfg.head_dim), dt),
+            }
+        )
+    return {
+        "lengths": jnp.zeros((batch,), jnp.int32),
+        "frame_lengths": jnp.zeros((batch,), jnp.int32),
+        "layers": layers,
+    }
+
+
+def encode(cfg: ModelConfig, params, frames: jnp.ndarray, impl="auto") -> jnp.ndarray:
+    """frames: [B, F, d] stubbed frontend output -> encoder states [B, F, d]."""
+    b, f, d = frames.shape
+    pos = L.sinusoid_positions(f, d).astype(frames.dtype)
+    x = frames + pos[None]
+    positions = jnp.broadcast_to(jnp.arange(f)[None], (b, f))
+    for lp in params["encoder"]:
+        h = L.rmsnorm(lp["attn_norm"], x, cfg.rmsnorm_eps)
+        out, _ = A.attention(
+            cfg, lp["attn"], h, positions=positions, lengths=None, cache=None,
+            mode="train", impl=impl, bidirectional=True,
+        )
+        x = x + out
+        h = L.rmsnorm(lp["ffn_norm"], x, cfg.rmsnorm_eps)
+        x = x + L.ffn(lp["ffn"], h)
+    return L.rmsnorm(params["enc_norm"], x, cfg.rmsnorm_eps)
+
+
+def _cross_attention(
+    cfg, p, x, cross_k, cross_v, frame_lengths, impl
+) -> jnp.ndarray:
+    """Decoder->encoder attention against the cached cross K/V."""
+    b, t, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = L.dense(p["wq"], x).reshape(b, t, hq, dh)
+    f = cross_k.shape[1]
+    k_valid = jnp.arange(f)[None] < frame_lengths[:, None]
+    out = ops.flash_attention(
+        q, cross_k, cross_v,
+        q_positions=jnp.zeros((b, t), jnp.int32),
+        k_positions=jnp.zeros((b, f), jnp.int32),
+        causal=False, k_valid=k_valid, impl=impl,
+    )
+    return L.dense(p["wo"], out.reshape(b, t, hq * dh))
+
+
+def _cross_kv(cfg, p, enc: jnp.ndarray):
+    b, f, _ = enc.shape
+    k = L.dense(p["wk"], enc).reshape(b, f, cfg.n_kv_heads, cfg.head_dim)
+    v = L.dense(p["wv"], enc).reshape(b, f, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    batch: dict,
+    *,
+    cache: Optional[dict] = None,
+    mode: str = "train",
+    impl: str = "auto",
+):
+    """batch: {"frames": [B,F,d] (train/prefill), "tokens": [B,T]}.
+
+    train:   teacher-forced decoder over full target (encoder run inline).
+    prefill: runs the encoder, fills cross-KV caches, prefills decoder
+             self-KV with the BOS/prompt tokens.
+    decode:  one decoder token against both caches (encoder NOT re-run —
+             the Seamless profile).
+    """
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+
+    if mode in ("train", "prefill"):
+        enc = encode(cfg, params, batch["frames"], impl=impl)
+        frame_lengths = batch.get(
+            "frame_lengths", jnp.full((b,), enc.shape[1], jnp.int32)
+        )
+    else:
+        enc = None
+        frame_lengths = cache["frame_lengths"]
+
+    if mode == "train" or cache is None:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        lengths = None
+    else:
+        lengths = cache["lengths"]
+        positions = lengths[:, None] + jnp.arange(t)[None]
+
+    x = L.embed(params["embed"], tokens)
+    new_layers = []
+    for i, lp in enumerate(params["decoder"]):
+        lc = cache["layers"][i] if cache is not None else None
+        h = L.rmsnorm(lp["self_norm"], x, cfg.rmsnorm_eps)
+        out, new_self = A.attention(
+            cfg, lp["self_attn"], h, positions=positions, lengths=lengths,
+            cache=None if lc is None else lc["self"], mode=mode, impl=impl,
+        )
+        x = x + out
+
+        if mode == "decode":
+            ck, cv = lc["cross_k"], lc["cross_v"]
+        else:
+            ck, cv = _cross_kv(cfg, lp["cross_attn"], enc)
+        h = L.rmsnorm(lp["cross_norm"], x, cfg.rmsnorm_eps)
+        x = x + _cross_attention(
+            cfg, lp["cross_attn"], h, ck, cv, frame_lengths, impl
+        )
+
+        h = L.rmsnorm(lp["ffn_norm"], x, cfg.rmsnorm_eps)
+        x = x + L.ffn(lp["ffn"], h)
+        if cache is not None:
+            new_layers.append({"self": new_self, "cross_k": ck, "cross_v": cv})
+
+    x = L.rmsnorm(params["dec_norm"], x, cfg.rmsnorm_eps)
+    logits = L.dense(params["lm_head"], x).astype(jnp.float32)
+
+    new_cache = None
+    if cache is not None:
+        if mode == "prefill":
+            new_len = batch.get("prompt_lengths", jnp.full((b,), t, jnp.int32))
+        else:
+            new_len = cache["lengths"] + t
+        new_cache = {
+            "lengths": new_len,
+            "frame_lengths": frame_lengths,
+            "layers": new_layers,
+        }
+    return logits, new_cache, {"aux_loss": jnp.float32(0.0)}

@@ -1,0 +1,91 @@
+"""HSTU generative DLRM (the paper's fourth workload, §2.1.4).
+
+Hierarchical Sequential Transduction Unit: a stack of identical layers with
+(1) pointwise projection U,V,Q,K, (2) spatial aggregation via
+pointwise-normalized SiLU attention with a learned relative position bias
+(NO softmax), (3) pointwise transformation with elementwise gating.
+
+Non-autoregressive: one forward pass scores every position (paper Obs #1 —
+no decode loop, hence the distinct latency profile). Layers >= 3 cap the
+attention context at ``hstu_max_attn_len`` (paper §3.1: "limit the maximum
+input sequence length for later 11 layers as 1024").
+
+Heads: retrieval (next item over the item vocabulary, weight-tied) and
+ranking (engagement-type logits per position).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+N_ENGAGEMENT_TYPES = 8
+MAX_REL_POS = 2048
+FULL_ATTN_LAYERS = 3  # layers below this attend over the full sequence
+
+
+def init_layer(key, cfg: ModelConfig):
+    dt = L.param_dtype(cfg)
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": L.rmsnorm_init(d, dt),
+        "uvqk": L.dense_init(ks[0], d, 4 * h * dh, dt),
+        "rel_bias": (jax.random.normal(ks[1], (2 * MAX_REL_POS - 1,), jnp.float32) * 0.02),
+        "out_norm": L.rmsnorm_init(h * dh, dt),
+        "out": L.dense_init(ks[2], h * dh, d, dt),
+    }
+
+
+def layer_forward(cfg, p, x, *, layer: int, lengths=None, impl="auto"):
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    hx = L.rmsnorm(p["norm"], x, cfg.rmsnorm_eps)
+    uvqk = jax.nn.silu(L.dense(p["uvqk"], hx)).reshape(b, t, 4, h, dh)
+    u, v, q, k = (uvqk[:, :, i] for i in range(4))
+    max_len = cfg.hstu_max_attn_len if layer >= FULL_ATTN_LAYERS else None
+    attn = ops.hstu_attention(
+        q, k, v, p["rel_bias"], max_attn_len=max_len, lengths=lengths, impl=impl
+    )
+    gated = L.rmsnorm(p["out_norm"], (attn * u).reshape(b, t, h * dh), cfg.rmsnorm_eps)
+    return x + L.dense(p["out"], gated)
+
+
+def init(cfg: ModelConfig, key):
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    dt = L.param_dtype(cfg)
+    return {
+        "embed": L.embedding_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+        "ranking_head": L.dense_init(ks[1], cfg.d_model, N_ENGAGEMENT_TYPES, dt),
+        "layers": [init_layer(ks[2 + i], cfg) for i in range(cfg.n_layers)],
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    raise NotImplementedError(
+        "HSTU is non-autoregressive (paper Obs #1): no decode loop, no cache."
+    )
+
+
+def forward(cfg, params, batch, *, cache=None, mode="train", impl="auto"):
+    """batch: {"tokens": [B, T] item-id history, "lengths": optional [B]}.
+
+    Returns retrieval logits [B, T, vocab] (next-item prediction); ranking
+    logits are in aux (engagement type per position).
+    """
+    assert cache is None and mode in ("train", "prefill"), "HSTU is non-AR"
+    tokens = batch["tokens"]
+    lengths = batch.get("lengths")
+    x = L.embed(params["embed"], tokens)
+    for i, lp in enumerate(params["layers"]):
+        x = layer_forward(cfg, lp, x, layer=i, lengths=lengths, impl=impl)
+    x = L.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+    retrieval = L.unembed(params["embed"], x)
+    ranking = L.dense(params["ranking_head"], x).astype(jnp.float32)
+    return retrieval, None, {"aux_loss": jnp.float32(0.0), "ranking_logits": ranking}

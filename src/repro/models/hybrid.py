@@ -1,0 +1,177 @@
+"""Griffin / RecurrentGemma: RG-LRU recurrent blocks + local (sliding
+window) attention, interleaved by a fixed pattern (2 recurrent : 1 attn).
+
+Decode state is bounded: a [B, lru_width] recurrent state + conv tail for
+recurrent blocks, and a window-sized ring-buffer KV cache for the local
+attention blocks — which is why long_500k decode is native here.
+
+The RG-LRU recurrence is h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t ⊙ x_t) with
+a_t = exp(-c softplus(Λ) r_t). Train/prefill evaluate it with
+``jax.lax.associative_scan`` (parallel prefix over time — TPU-friendly,
+this is the recurrent analogue of flash attention's log-depth reduction);
+decode is a single fused step.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+
+RG_LRU_C = 8.0
+
+
+def init_recurrent_block(key, cfg: ModelConfig):
+    hy = cfg.hybrid
+    dt = L.param_dtype(cfg)
+    d, w = cfg.d_model, hy.lru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "proj_x": L.dense_init(ks[0], d, w, dt),
+        "proj_gate": L.dense_init(ks[1], d, w, dt),
+        "conv_w": (jax.random.normal(ks[2], (w, hy.conv_width), jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "gate_a": L.dense_init(ks[3], w, w, dt, bias=True),
+        "gate_x": L.dense_init(ks[4], w, w, dt, bias=True),
+        # Λ init so that a ≈ 0.9..0.999 at r=1 (stable long memory)
+        "lam": jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / RG_LRU_C)).astype(jnp.float32),
+        "proj_out": L.dense_init(ks[5], w, d, dt),
+    }
+
+
+def init_recurrent_cache(cfg: ModelConfig, batch: int):
+    hy = cfg.hybrid
+    dt = L.param_dtype(cfg)
+    return {
+        "state": jnp.zeros((batch, hy.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, hy.conv_width - 1, hy.lru_width), dt),
+    }
+
+
+def _rg_lru(p, x: jnp.ndarray, h0: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, T, W] (post-conv). Returns (h [B,T,W] f32, h_final [B,W])."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(L.dense(p["gate_a"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.dense(p["gate_x"], x).astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lam"])[None, None] * r  # [B,T,W] <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+
+    if h0 is not None:
+        # fold the carried state into the first step: b_0' = a_0 h0 + b_0
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h, h[:, -1]
+
+
+def recurrent_block_forward(cfg, p, x, *, cache, mode):
+    hy = cfg.hybrid
+    b, t, d = x.shape
+    gate = jax.nn.gelu(L.dense(p["proj_gate"], x))
+    xb = L.dense(p["proj_x"], x)
+
+    tail = cache["conv"] if (cache is not None and mode == "decode") else None
+    from repro.models.ssm import _causal_conv  # shared depthwise causal conv
+
+    xc, new_tail = _causal_conv(xb, p["conv_w"], p["conv_b"], tail)
+
+    if mode == "decode":
+        h0 = cache["state"]
+        h, h_final = _rg_lru(p, xc, h0)
+    else:
+        h, h_final = _rg_lru(p, xc, None)
+
+    out = L.dense(p["proj_out"], (h.astype(x.dtype) * gate))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": h_final, "conv": new_tail.astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def init(cfg: ModelConfig, key):
+    hy = cfg.hybrid
+    dt = L.param_dtype(cfg)
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    layers = []
+    for i in range(cfg.n_layers):
+        kind = hy.block_kind(i)
+        ka, kf = jax.random.split(ks[i + 1])
+        lp = {
+            "norm": L.rmsnorm_init(cfg.d_model, dt),
+            "ffn_norm": L.rmsnorm_init(cfg.d_model, dt),
+            "ffn": L.ffn_init(kf, cfg.d_model, cfg.d_ff, dt),
+        }
+        if kind == "attention":
+            lp["attn"] = A.init_attention(ka, cfg)
+        else:
+            lp["rec"] = init_recurrent_block(ka, cfg)
+        layers.append(lp)
+    return {
+        "embed": L.embedding_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+        "layers": layers,
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    hy = cfg.hybrid
+    layers = []
+    for i in range(cfg.n_layers):
+        if hy.block_kind(i) == "attention":
+            layers.append(
+                A.init_attention_cache(cfg, batch, max_len, window=hy.window)
+            )
+        else:
+            layers.append(init_recurrent_cache(cfg, batch))
+    return {"lengths": jnp.zeros((batch,), jnp.int32), "layers": layers}
+
+
+def forward(cfg, params, batch, *, cache=None, mode="train", impl="auto"):
+    hy = cfg.hybrid
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    if mode == "train" or cache is None:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        lengths = None
+    else:
+        lengths = cache["lengths"]
+        positions = lengths[:, None] + jnp.arange(t)[None]
+
+    x = L.embed(params["embed"], tokens)
+    new_layers = []
+    for i, lp in enumerate(params["layers"]):
+        kind = hy.block_kind(i)
+        lc = cache["layers"][i] if cache is not None else None
+        h = L.rmsnorm(lp["norm"], x, cfg.rmsnorm_eps)
+        if kind == "attention":
+            out, nlc = A.attention(
+                cfg, lp["attn"], h, positions=positions, lengths=lengths,
+                cache=lc, mode=mode, window=hy.window, impl=impl,
+            )
+        else:
+            out, nlc = recurrent_block_forward(cfg, lp["rec"], h, cache=lc, mode=mode)
+        x = x + out
+        h = L.rmsnorm(lp["ffn_norm"], x, cfg.rmsnorm_eps)
+        x = x + L.ffn(lp["ffn"], h)
+        new_layers.append(nlc)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+    logits = L.unembed(params["embed"], x)
+    new_cache = None
+    if cache is not None:
+        if mode == "prefill":
+            new_len = batch.get("prompt_lengths", jnp.full((b,), t, jnp.int32))
+        else:
+            new_len = cache["lengths"] + t
+        new_cache = {"lengths": new_len, "layers": new_layers}
+    return logits, new_cache, {"aux_loss": jnp.float32(0.0)}

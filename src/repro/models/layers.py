@@ -1,0 +1,114 @@
+"""Shared model primitives: inits, RMSNorm, RoPE, SwiGLU, embeddings.
+
+All models are purely functional: params are nested dicts of jnp arrays,
+forward functions are closed over nothing. Param leaf dtype follows
+``cfg.dtype`` (bf16 by default); norms/router math runs in f32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+
+
+def param_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    if "w" not in p:  # AutoQuant'd linear (core/quantization.py)
+        from repro.core.quantization import qdense
+
+        return qdense(p, x)
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embedding_init(key, vocab: int, d: int, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)).astype(dtype)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    """Tied LM head: logits = x @ table^T (f32 for stable softmax/loss)."""
+    return jnp.einsum(
+        "...d,vd->...v", x.astype(jnp.float32), p["table"].astype(jnp.float32)
+    )
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5, impl: str = "auto"):
+    return ops.rmsnorm(x, p["scale"], eps=eps, impl="xla" if impl == "auto" else impl)
+
+
+# ---- RoPE -----------------------------------------------------------------
+
+def rope_frequencies(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, T, H, D]; positions: [B, T]. Llama-style rotate-half."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B,T,D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(n: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings [n, d]."""
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half) / (half - 1))
+    args = jnp.arange(n)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1)
+
+
+# ---- SwiGLU FFN -----------------------------------------------------------
+
+def ffn_init(key, d: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, d, d_ff, dtype),
+        "w3": dense_init(k2, d, d_ff, dtype),
+        "w2": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def ffn(p, x):
+    return dense(p["w2"], jax.nn.silu(dense(p["w1"], x)) * dense(p["w3"], x))
+
+
+def cross_entropy_loss(
+    logits: jnp.ndarray,  # [B, T, V] (f32)
+    labels: jnp.ndarray,  # [B, T]
+    mask: Optional[jnp.ndarray] = None,  # [B, T]
+) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

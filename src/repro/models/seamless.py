@@ -1,0 +1,161 @@
+"""SeamlessM4T-style 4-module speech-translation model (paper §2.1.3).
+
+The paper's Seamless analysis hinges on its heterogeneous module mix
+(Fig 2c, Fig 7): only ONE of four modules is autoregressive —
+
+  1. Conformer speech encoder  — here: the encdec bidirectional encoder
+     over stubbed frame embeddings (conv/mel frontend = allowed carve-out);
+  2. T2TT text decoder         — autoregressive, beam search, KV reorder
+     (the encdec decoder; the paper's Obs #2/#4 subject);
+  3. NAR T2U                   — NON-autoregressive text→unit transducer:
+     one forward pass emits the whole unit sequence (×UPSAMPLE length);
+  4. Vocoder                   — HiFi-GAN analogue: unit embeddings →
+     stacked upsampling depthwise-conv blocks → waveform. The paper
+     measured its biggest single win here (30× from compile+graph,
+     Fig 7) because the vocoder is a long chain of cheap kernels.
+
+Tasks: S-T / T-T use modules 1-2; S-S / T-S additionally run 3-4
+(paper: "speech generation tasks are 20-24% slower").
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import encdec
+from repro.models import layers as L
+
+N_UNITS = 10_000  # discrete speech units (paper: XLS-R kmeans units)
+UPSAMPLE_T2U = 2  # text tokens -> units
+UPSAMPLE_VOCODER = (4, 4)  # unit -> waveform sample rate factors
+
+# the T2TT backbone is the encdec model
+init_cache = encdec.init_cache
+
+
+def init(cfg: ModelConfig, key):
+    k_backbone, k_t2u, k_voc = jax.random.split(key, 3)
+    p = encdec.init(cfg, k_backbone)
+    p["t2u"] = init_t2u(cfg, k_t2u)
+    p["vocoder"] = init_vocoder(cfg, k_voc)
+    return p
+
+
+def forward(cfg, params, batch, *, cache=None, mode="train", impl="auto"):
+    """Uniform Model API = the autoregressive T2TT path (modules 1-2).
+    NAR T2U + vocoder run via :func:`t2u_forward` / :func:`vocode`."""
+    backbone = {k: v for k, v in params.items() if k not in ("t2u", "vocoder")}
+    return encdec.forward(cfg, backbone, batch, cache=cache, mode=mode, impl=impl)
+
+
+# --------------------------------------------------------------------------
+# module 3: NAR text-to-unit
+# --------------------------------------------------------------------------
+
+def init_t2u(cfg: ModelConfig, key):
+    dt = L.param_dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": L.embedding_init(ks[0], cfg.vocab_size, d, dt),
+        "layers": [
+            encdec.init_encoder_layer(ks[1 + i], cfg) for i in range(2)
+        ],
+        "norm": L.rmsnorm_init(d, dt),
+        "unit_head": L.dense_init(ks[3], d, N_UNITS, dt),
+    }
+
+
+def t2u_forward(cfg: ModelConfig, p, text_tokens: jnp.ndarray,
+                impl: str = "auto") -> jnp.ndarray:
+    """NAR T2U: text tokens [B, T] -> unit logits [B, T*UPSAMPLE, N_UNITS]
+    in ONE forward pass (no decode loop — the paper's NAR contrast)."""
+    b, t = text_tokens.shape
+    x = L.embed(p["embed"], text_tokens)
+    x = jnp.repeat(x, UPSAMPLE_T2U, axis=1)  # length regulation (fixed 2x)
+    tu = t * UPSAMPLE_T2U
+    pos = L.sinusoid_positions(tu, cfg.d_model).astype(x.dtype)
+    x = x + pos[None]
+    positions = jnp.broadcast_to(jnp.arange(tu)[None], (b, tu))
+    for lp in p["layers"]:
+        h = L.rmsnorm(lp["attn_norm"], x, cfg.rmsnorm_eps)
+        out, _ = A.attention(
+            cfg, lp["attn"], h, positions=positions, lengths=None, cache=None,
+            mode="train", impl=impl, bidirectional=True,
+        )
+        x = x + out
+        h = L.rmsnorm(lp["ffn_norm"], x, cfg.rmsnorm_eps)
+        x = x + L.ffn(lp["ffn"], h)
+    x = L.rmsnorm(p["norm"], x, cfg.rmsnorm_eps)
+    return L.dense(p["unit_head"], x).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# module 4: vocoder (HiFi-GAN analogue)
+# --------------------------------------------------------------------------
+
+VOC_CHANNELS = (256, 128, 64)
+VOC_KERNEL = 7
+
+
+def init_vocoder(cfg: ModelConfig, key):
+    dt = L.param_dtype(cfg)
+    ks = jax.random.split(key, 2 + 2 * len(VOC_CHANNELS))
+    p = {"unit_embed": L.embedding_init(ks[0], N_UNITS, VOC_CHANNELS[0], dt)}
+    chans = VOC_CHANNELS + (1,)
+    for i in range(len(VOC_CHANNELS)):
+        p[f"conv{i}_w"] = (
+            jax.random.normal(ks[1 + 2 * i], (chans[i], VOC_KERNEL), jnp.float32)
+            * (VOC_KERNEL * chans[i]) ** -0.5
+        ).astype(dt)
+        p[f"conv{i}_b"] = jnp.zeros((chans[i],), dt)
+        p[f"proj{i}"] = L.dense_init(ks[2 + 2 * i], chans[i], chans[i + 1], dt)
+    return p
+
+
+def vocode(cfg: ModelConfig, p, units: jnp.ndarray) -> jnp.ndarray:
+    """units [B, U] -> waveform [B, U * prod(UPSAMPLE_VOCODER)].
+
+    Each block: nearest-neighbour upsample -> depthwise conv (width 7)
+    -> leaky-relu -> channel projection. A long chain of cheap kernels:
+    the exact shape of the paper's 30x compile win (Fig 7)."""
+    from repro.models.ssm import _causal_conv
+
+    x = L.embed(p["unit_embed"], units)  # [B, U, C0]
+    for i, factor in enumerate(UPSAMPLE_VOCODER + (1,)[: len(VOC_CHANNELS) - 2]):
+        if i >= len(VOC_CHANNELS):
+            break
+        x = jnp.repeat(x, factor, axis=1) if factor > 1 else x
+        y, _ = _causal_conv(x, p[f"conv{i}_w"], p[f"conv{i}_b"], None)
+        x = jax.nn.leaky_relu(y, 0.1)
+        x = L.dense(p[f"proj{i}"], x)
+    return x[..., 0]  # [B, samples]
+
+
+# --------------------------------------------------------------------------
+# task pipelines (paper Table 1)
+# --------------------------------------------------------------------------
+
+def speech_to_speech(
+    model, params, *, frames: jnp.ndarray, bos_id: int = 1, eos_id: int = 2,
+    n_beams: int = 4, max_text_len: int = 32,
+) -> Dict[str, jnp.ndarray]:
+    """S-S: beam-decode translated text (AR, modules 1-2), then one NAR
+    T2U forward and one vocoder forward (modules 3-4)."""
+    from repro.core import engine
+
+    cfg = model.config
+    b = frames.shape[0]
+    text = engine.generate_beam(
+        model, params, batch=b, n_beams=n_beams, bos_id=bos_id, eos_id=eos_id,
+        max_new_tokens=max_text_len, extra_inputs={"frames": frames},
+    )
+    unit_logits = t2u_forward(cfg, params["t2u"], text["tokens"])
+    units = jnp.argmax(unit_logits, axis=-1)
+    wave = vocode(cfg, params["vocoder"], units)
+    return {"text": text["tokens"], "units": units, "waveform": wave,
+            "n_decode_steps": text["n_steps"]}

@@ -1,0 +1,172 @@
+"""Mamba-2 (SSD) model: attention-free, constant-size recurrent state.
+
+The "KV cache" of an SSM is a fixed [B, H, P, N] state plus a [B, conv_dim,
+d_conv-1] convolution tail — the paper's static-cache requirement (§4.1.2)
+is structurally free here, which is exactly why the paper's Obs #1/#2
+contrast autoregressive attention models against recurrent ones.
+
+Train/prefill use the chunked SSD scan (quadratic intra-chunk + linear
+inter-chunk); decode is an O(H·P·N) recurrence step.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nh, conv_dim
+
+
+def init_block(key, cfg: ModelConfig):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    dt = L.param_dtype(cfg)
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    # in_proj -> [z (d_in), x (d_in), B (G*N), C (G*N), dt (nh)]
+    out_w = 2 * d_in + 2 * s.n_groups * s.d_state + nh
+    return {
+        "in_proj": L.dense_init(ks[0], d, out_w, dt),
+        "conv_w": (jax.random.normal(ks[1], (conv_dim, s.d_conv), jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        # softplus^-1 of dt in [1e-3, 0.1] (mamba2 init): without it dt
+        # starts ~0.7 and 16-step cumulative decays overflow exp() in AD
+        "dt_bias": jnp.log(
+            jnp.expm1(jnp.exp(jax.random.uniform(
+                ks[3], (nh,), minval=jnp.log(1e-3), maxval=jnp.log(0.1))))
+        ).astype(jnp.float32),
+        "gate_norm": L.rmsnorm_init(d_in, dt),
+        "out_proj": L.dense_init(ks[2], d_in, d, dt),
+    }
+
+
+def init_block_cache(cfg: ModelConfig, batch: int):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    dt = L.param_dtype(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dt),
+        "state": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d. xbc [B,T,C], w [C,W]. Returns (y, new_tail)."""
+    width = w.shape[1]
+    if tail is None:
+        tail = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([tail, xbc], axis=1)  # [B, T+W-1, C]
+    y = sum(
+        xp[:, i : i + xbc.shape[1]] * w[:, i][None, None, :] for i in range(width)
+    )
+    new_tail = xp[:, xp.shape[1] - (width - 1):]
+    return y + b[None, None, :], new_tail
+
+
+def block_forward(
+    cfg: ModelConfig,
+    p,
+    x: jnp.ndarray,  # [B, T, d]
+    *,
+    cache: Optional[dict],
+    mode: str,
+    impl: str = "auto",
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    s, d_in, nh, conv_dim = _dims(cfg)
+    b, t, d = x.shape
+    g, n, hp = s.n_groups, s.d_state, s.head_dim
+
+    zxbcdt = L.dense(p["in_proj"], x)  # [z | xBC (conv'd together) | dt]
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + conv_dim]
+    dt_raw = zxbcdt[..., d_in + conv_dim :]
+
+    tail = cache["conv"] if cache is not None else None
+    if mode in ("decode", "extend"):
+        xbc_conv, new_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], tail)
+    else:
+        # train/prefill start from a zero conv state
+        xbc_conv, new_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], None)
+    xbc_conv = jax.nn.silu(xbc_conv)
+
+    xs = xbc_conv[..., :d_in].reshape(b, t, nh, hp)
+    B_ = xbc_conv[..., d_in : d_in + g * n].reshape(b, t, g, n)
+    C = xbc_conv[..., d_in + g * n :].reshape(b, t, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+
+    if mode == "decode":
+        y, new_state = ops.ssd_decode_step(
+            xs[:, 0], dt[:, 0], A, B_[:, 0], C[:, 0], p["D"], cache["state"]
+        )
+        y = y[:, None]
+    else:
+        init_state = cache["state"] if mode == "extend" else None
+        y, new_state = ops.ssd_scan(
+            xs, dt, A, B_, C, p["D"], chunk=s.chunk_size,
+            initial_state=init_state, impl=impl if impl != "pallas" else "xla",
+        )
+    y = y.reshape(b, t, d_in)
+    y = L.rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.rmsnorm_eps)
+    out = L.dense(p["out_proj"], y)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_tail.astype(cache["conv"].dtype), "state": new_state}
+    return out, new_cache
+
+
+def init(cfg: ModelConfig, key):
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    dt = L.param_dtype(cfg)
+    return {
+        "embed": L.embedding_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+        "layers": [
+            {"norm": L.rmsnorm_init(cfg.d_model, dt), "mixer": init_block(ks[i + 1], cfg)}
+            for i in range(cfg.n_layers)
+        ],
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    del max_len  # constant-size state: the whole point
+    return {
+        "lengths": jnp.zeros((batch,), jnp.int32),
+        "layers": [init_block_cache(cfg, batch) for _ in range(cfg.n_layers)],
+    }
+
+
+def forward(cfg, params, batch, *, cache=None, mode="train", impl="auto"):
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    new_layers = []
+    for i, lp in enumerate(params["layers"]):
+        lc = cache["layers"][i] if cache is not None else None
+        h = L.rmsnorm(lp["norm"], x, cfg.rmsnorm_eps)
+        out, nlc = block_forward(cfg, lp["mixer"], h, cache=lc, mode=mode, impl=impl)
+        x = x + out
+        new_layers.append(nlc)
+    x = L.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+    logits = L.unembed(params["embed"], x)
+    new_cache = None
+    if cache is not None:
+        if mode == "prefill":
+            new_len = batch.get("prompt_lengths", jnp.full((b,), t, jnp.int32))
+        else:
+            new_len = cache["lengths"] + t
+        new_cache = {"lengths": new_len, "layers": new_layers}
+    return logits, new_cache, {"aux_loss": jnp.float32(0.0)}

@@ -1,0 +1,71 @@
+"""Chameleon-style early-fusion VLM (paper §2.1.2).
+
+Architecturally identical to the dense decoder-only transformer: images
+and text are BOTH discrete tokens in one unified vocabulary, so the model
+body is `models.transformer`. What this module adds:
+
+- the STUBBED VQ image tokenizer (allowed carve-out): images arrive as
+  precomputed token ids in [0, image_vocab), offset into the tail of the
+  vocabulary (`image_token_offset`);
+- input builders for the paper's three Chameleon tasks:
+  I-T  (captioning: 1024 image tokens + short prompt),
+  IT-T (VQA: 1024 image tokens + question),
+  T-I  (generation: text prompt, model emits 1024 image tokens);
+- the contrastive (classifier-free-guidance) T-I decode helper used by
+  core/engine.py — the paper's "decodes twice at each time step" profile.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+init = transformer.init
+init_cache = transformer.init_cache
+forward = transformer.forward
+
+
+def image_token_offset(cfg: ModelConfig) -> int:
+    return cfg.vocab_size - cfg.vlm.image_vocab
+
+
+def encode_image_stub(cfg: ModelConfig, key, batch: int) -> jnp.ndarray:
+    """Stub VQ tokenizer: [B, n_image_tokens] ids in the image-token range.
+
+    A real Chameleon runs Make-A-Scene VQ-VAE encoding here; the carve-out
+    says the transformer consumes its (token) output, so we sample ids.
+    """
+    v = cfg.vlm
+    return image_token_offset(cfg) + jax.random.randint(
+        key, (batch, v.n_image_tokens), 0, v.image_vocab
+    )
+
+
+def build_it_input(cfg: ModelConfig, image_tokens: jnp.ndarray,
+                   text_tokens: jnp.ndarray) -> jnp.ndarray:
+    """[image tokens ; text tokens] — the I-T / IT-T prompt layout
+    (paper §3.1: 1024 image tokens + question/prompt tokens)."""
+    return jnp.concatenate([image_tokens, text_tokens], axis=1)
+
+
+def contrastive_logits(
+    cond_logits: jnp.ndarray,
+    uncond_logits: jnp.ndarray,
+    guidance: float = 3.0,
+) -> jnp.ndarray:
+    """Contrastive decoding for T-I (paper §2.1.2): conditional logits act
+    as the strong model, unconditional as the weak model —
+    logits = uncond + g * (cond - uncond). The engine evaluates BOTH
+    streams every step (2x decode FLOPs, the paper's T-I latency driver)."""
+    return uncond_logits + guidance * (cond_logits - uncond_logits)
+
+
+def image_token_mask(cfg: ModelConfig, vocab_logits: jnp.ndarray) -> jnp.ndarray:
+    """Restrict sampling to the image-token range during T-I generation."""
+    off = image_token_offset(cfg)
+    mask = jnp.arange(cfg.vocab_size) >= off
+    return jnp.where(mask[None, :], vocab_logits, -jnp.inf)

@@ -1,0 +1,67 @@
+"""Checkpointing: flat-key .npz snapshots of (params, optimizer state,
+step) with structure round-trip — no external deps, works for every model
+family's nested dict/list/NamedTuple trees."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+_BF16 = "__bf16__"  # npz has no bfloat16: stored as uint16 bit pattern
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            key += _BF16
+            arr = arr.view(np.uint16)
+        out[key] = arr
+    return out
+
+
+def save(path: str, params: Any, opt_state: Any = None, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    payload["__step__"] = np.asarray(step)
+    np.savez(path, **payload)
+
+
+def restore(path: str, params_like: Any, opt_like: Any = None) -> Tuple[Any, Any, int]:
+    """Restore into the structure of (params_like, opt_like) templates."""
+    with np.load(path, allow_pickle=False) as z:
+        data = {k: z[k] for k in z.files}
+    step = int(data.pop("__step__"))
+
+    def fill(template: Any, prefix: str) -> Any:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path, leaf in flat:
+            key = prefix + "/".join(
+                str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                for p in path
+            )
+            if key + _BF16 in data:
+                arr = data[key + _BF16].view(jnp.bfloat16)
+            else:
+                arr = data[key]
+            assert arr.shape == leaf.shape, f"{key}: {arr.shape} != {leaf.shape}"
+            leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    params = fill(params_like, "params/")
+    opt = fill(opt_like, "opt/") if opt_like is not None else None
+    return params, opt, step

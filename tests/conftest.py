@@ -1,0 +1,10 @@
+import os
+
+# Tests run single-device on CPU: the dry-run (and ONLY the dry-run) forces
+# 512 placeholder devices, in its own subprocess.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("repro", deadline=None, max_examples=15)
+settings.load_profile("repro")

@@ -1,0 +1,191 @@
+"""KV-cache invariants — the paper's §4.1.2 static-cache discipline.
+
+The central property: prefill + N single-token decodes produce exactly the
+logits of one full-context forward, for EVERY architecture family
+(attention, MLA latent cache, SSM state, RG-LRU + ring window, enc-dec
+self+cross caches)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_CONFIGS
+from repro.core import kv_cache
+from repro.models import get_model
+
+KEY = jax.random.PRNGKey(0)
+ARCHS = [a for a in SMOKE_CONFIGS if a != "hstu"]
+
+
+def _f32(cfg):
+    cfg = cfg.replace(dtype="float32")
+    if cfg.moe is not None:  # dropless capacity for exact equivalence
+        cfg = cfg.replace(
+            moe=dataclasses.replace(
+                cfg.moe, capacity_factor=cfg.moe.n_experts / cfg.moe.top_k
+            )
+        )
+    return cfg
+
+
+def _extra(cfg, b):
+    if cfg.family in ("encdec", "seamless"):
+        return {
+            "frames": jax.random.normal(
+                KEY, (b, cfg.encdec.n_frames, cfg.d_model), jnp.float32
+            )
+        }
+    return {}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_full_forward(arch):
+    cfg = _f32(SMOKE_CONFIGS[arch])
+    model = get_model(cfg)
+    params = model.init(KEY)
+    b, t, ndec = 2, 12, 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, t + ndec), 0, cfg.vocab_size)
+    ex = _extra(cfg, b)
+
+    full, _, _ = model.forward(params, {"tokens": toks, **ex}, mode="train")
+    cache = model.init_cache(b, t + ndec + 2)
+    pf, cache, _ = model.forward(
+        params, {"tokens": toks[:, :t], **ex}, cache=cache, mode="prefill"
+    )
+    scale = float(np.abs(np.asarray(full)).max())
+    np.testing.assert_allclose(
+        np.asarray(pf), np.asarray(full[:, :t]), atol=2e-4 * max(scale, 1.0)
+    )
+    for i in range(ndec):
+        dl, cache, _ = model.forward(
+            params, {"tokens": toks[:, t + i : t + i + 1]}, cache=cache, mode="decode"
+        )
+        np.testing.assert_allclose(
+            np.asarray(dl[:, 0]),
+            np.asarray(full[:, t + i]),
+            atol=2e-4 * max(scale, 1.0),
+        )
+        assert int(cache["lengths"][0]) == t + i + 1
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "deepseek-v2-236b"])
+def test_extend_mode_matches_decode_chain(arch):
+    """'extend' (speculative verification window) == sequential decodes."""
+    cfg = _f32(SMOKE_CONFIGS[arch])
+    model = get_model(cfg)
+    params = model.init(KEY)
+    b, t, w = 2, 8, 3
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, t + w), 0, cfg.vocab_size)
+
+    cache0 = model.init_cache(b, t + w + 2)
+    _, cache0, _ = model.forward(
+        params, {"tokens": toks[:, :t]}, cache=cache0, mode="prefill"
+    )
+    # path A: decode one at a time
+    ca = cache0
+    outs_a = []
+    for i in range(w):
+        la, ca, _ = model.forward(
+            params, {"tokens": toks[:, t + i : t + i + 1]}, cache=ca, mode="decode"
+        )
+        outs_a.append(la[:, 0])
+    # path B: one extend over the window
+    lb, cb, _ = model.forward(
+        params, {"tokens": toks[:, t : t + w]}, cache=cache0, mode="extend"
+    )
+    for i in range(w):
+        np.testing.assert_allclose(
+            np.asarray(lb[:, i]), np.asarray(outs_a[i]), atol=1e-4
+        )
+    assert int(cb["lengths"][0]) == int(ca["lengths"][0])
+
+
+def test_sliding_window_ring_buffer_equivalence():
+    """A ring cache of size W must reproduce full-cache logits whenever the
+    window covers the attended context."""
+    cfg = _f32(SMOKE_CONFIGS["llama3.2-1b"]).replace(sliding_window=8)
+    model = get_model(cfg)
+    params = model.init(KEY)
+    b, t, ndec = 2, 6, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, t + ndec), 0, cfg.vocab_size)
+
+    # reference: full (non-ring) forward with window masking
+    full, _, _ = model.forward(params, {"tokens": toks}, mode="train")
+
+    cache = model.init_cache(b, t + ndec)  # ring: size == window (8)
+    assert cache["layers"][0]["k"].shape[1] == 8
+    _, cache, _ = model.forward(
+        params, {"tokens": toks[:, :t]}, cache=cache, mode="prefill"
+    )
+    for i in range(ndec):
+        dl, cache, _ = model.forward(
+            params, {"tokens": toks[:, t + i : t + i + 1]}, cache=cache, mode="decode"
+        )
+        np.testing.assert_allclose(
+            np.asarray(dl[:, 0]), np.asarray(full[:, t + i]), atol=1e-4,
+            err_msg=f"ring decode step {i} (wraparound at step {8 - t})",
+        )
+
+
+def test_beam_reorder_gathers_all_leaves():
+    cfg = _f32(SMOKE_CONFIGS["llama3.2-1b"])
+    model = get_model(cfg)
+    cache = model.init_cache(4, 8)
+    cache["lengths"] = jnp.array([1, 2, 3, 4], jnp.int32)
+    idx = jnp.array([3, 3, 0, 1])
+    out = kv_cache.reorder(cache, idx)
+    np.testing.assert_array_equal(np.asarray(out["lengths"]), [4, 4, 1, 2])
+    for leaf in jax.tree.leaves(out):
+        assert leaf.shape[0] == 4
+
+
+def test_reorder_donated_matches_realloc():
+    cfg = _f32(SMOKE_CONFIGS["llama3.2-1b"])
+    model = get_model(cfg)
+    params = model.init(KEY)
+    toks = jax.random.randint(KEY, (4, 5), 0, cfg.vocab_size)
+    cache = model.init_cache(4, 8)
+    _, cache, _ = model.forward(params, {"tokens": toks}, cache=cache, mode="prefill")
+    idx = jnp.array([2, 0, 3, 1])
+    a = kv_cache.reorder_donated(jax.tree.map(jnp.copy, cache), idx)
+    b = kv_cache.reorder_realloc(cache, idx)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_rewind_masks_stale_entries():
+    """Speculative rollback: after rewinding, decoding a different token
+    must be unaffected by the stale (rejected) cache entries."""
+    cfg = _f32(SMOKE_CONFIGS["llama3.2-1b"])
+    model = get_model(cfg)
+    params = model.init(KEY)
+    b, t = 2, 6
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, t + 2), 0, cfg.vocab_size)
+    cache = model.init_cache(b, t + 6)
+    _, cache, _ = model.forward(
+        params, {"tokens": toks[:, :t]}, cache=cache, mode="prefill"
+    )
+    # write two speculative tokens, then rewind them away
+    spec = jax.random.randint(jax.random.PRNGKey(2), (b, 2), 0, cfg.vocab_size)
+    _, cache_spec, _ = model.forward(
+        params, {"tokens": spec}, cache=cache, mode="extend"
+    )
+    rewound = kv_cache.rewind(cache_spec, cache["lengths"])
+    la, _, _ = model.forward(
+        params, {"tokens": toks[:, t : t + 1]}, cache=rewound, mode="decode"
+    )
+    lb, _, _ = model.forward(
+        params, {"tokens": toks[:, t : t + 1]}, cache=cache, mode="decode"
+    )
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-5)
+
+
+def test_cache_bytes_accounting():
+    cfg = SMOKE_CONFIGS["llama3.2-1b"]
+    model = get_model(cfg)
+    cache = model.init_cache(2, 16)
+    # 2 layers * (k+v) * [2, 16, 2, 32] bf16 + lengths
+    expect = 2 * 2 * 2 * 16 * 2 * 32 * 2 + 2 * 4
+    assert kv_cache.cache_bytes(cache) == expect

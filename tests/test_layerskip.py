@@ -1,0 +1,74 @@
+"""LayerSkip self-speculative decoding (paper §4.3): losslessness under
+greedy decoding is the defining property."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_CONFIGS
+from repro.core import engine, layerskip, sampling
+from repro.models import get_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "qwen2.5-3b"])
+@pytest.mark.parametrize("n_draft", [1, 3, 5])
+def test_layerskip_lossless_greedy(arch, n_draft):
+    cfg = SMOKE_CONFIGS[arch].replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    prompts = jax.random.randint(KEY, (3, 8), 0, cfg.vocab_size)
+    want = engine.generate(
+        model, params, prompts, max_new_tokens=12, sampler=sampling.greedy
+    )["tokens"]
+    got = layerskip.layerskip_generate(
+        model, params, prompts, exit_layer=1, n_draft=n_draft, max_new_tokens=12
+    )
+    np.testing.assert_array_equal(np.asarray(got["tokens"]), np.asarray(want))
+    assert 0.0 <= got["acceptance"] <= 1.0
+    assert got["tokens_per_round"] >= 1.0
+
+
+def test_layerskip_early_exit_forward_matches_truncated_model():
+    """Draft logits == logits of a model literally truncated at E layers."""
+    cfg = SMOKE_CONFIGS["llama3.2-1b"].replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    toks = jax.random.randint(KEY, (2, 6), 0, cfg.vocab_size)
+    want, _ = layerskip.early_exit_forward(
+        cfg, params, {"tokens": toks}, n_layers=1, mode="train"
+    )
+    cfg1 = cfg.replace(n_layers=1)
+    model1 = get_model(cfg1)
+    params1 = {
+        "embed": params["embed"],
+        "final_norm": params["final_norm"],
+        "layers": params["layers"][:1],
+    }
+    got, _, _ = model1.forward(params1, {"tokens": toks}, mode="train")
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), atol=1e-5)
+
+
+def test_layerskip_rejects_recurrent_families():
+    cfg = SMOKE_CONFIGS["mamba2-130m"]
+    model = get_model(cfg)
+    params = model.init(KEY)
+    with pytest.raises(AssertionError):
+        layerskip.layerskip_generate(
+            model, params, jnp.zeros((1, 4), jnp.int32), exit_layer=1
+        )
+
+
+def test_layerskip_speedup_model():
+    """tokens/round grows with acceptance (the paper's Fig 8 mechanism)."""
+    cfg = SMOKE_CONFIGS["llama3.2-1b"].replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    prompts = jax.random.randint(KEY, (2, 6), 0, cfg.vocab_size)
+    out = layerskip.layerskip_generate(
+        model, params, prompts, exit_layer=1, n_draft=4, max_new_tokens=16
+    )
+    # tokens_per_round = 1 + accepted-per-round; must be consistent
+    assert out["tokens_per_round"] <= 1 + 4
+    assert out["n_rounds"] >= 16 // (1 + 4)

@@ -1,0 +1,77 @@
+"""AutoQuant tests (paper §4.2): error bounds, mode selection, and
+end-to-end quantized model correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as hst
+
+from repro.configs import SMOKE_CONFIGS
+from repro.core import quantization as Q
+from repro.kernels import ops
+from repro.models import get_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+@given(hst.integers(4, 128), hst.integers(4, 96))
+def test_quantize_int8_roundtrip_bound(k, n):
+    w = jax.random.normal(jax.random.PRNGKey(k * 1000 + n), (k, n))
+    wq, ws = ops.quantize_int8(w, axis=0)
+    deq = np.asarray(wq, np.float32) * np.asarray(ws)[None, :]
+    err = np.abs(deq - np.asarray(w))
+    # symmetric int8: max error <= scale/2 per channel
+    assert (err <= np.asarray(ws)[None, :] * 0.5 + 1e-7).all()
+
+
+def test_autoquant_mode_selection():
+    assert Q.roofline_mode(tokens_per_step=1) == "wo"  # decode: memory-bound
+    assert Q.roofline_mode(tokens_per_step=8) == "wo"
+    assert Q.roofline_mode(tokens_per_step=4096) == "dyn"  # prefill: compute
+
+
+def test_autoquant_skips_non_linears():
+    cfg = SMOKE_CONFIGS["llama3.2-1b"]
+    model = get_model(cfg)
+    params = model.init(KEY)
+    qp, counts = Q.autoquant(params, tokens_per_step=4)
+    assert counts["wo"] > 0 and counts["dyn"] == 0
+    # embeddings and norms untouched
+    assert "table" in qp["embed"]
+    assert "scale" in qp["final_norm"]
+    assert "w_q_wo" in qp["layers"][0]["attn"]["wq"]
+
+
+@pytest.mark.parametrize("mode", ["wo", "dyn"])
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "qwen3-moe-30b-a3b", "mamba2-130m"])
+def test_quantized_model_close_to_full(arch, mode):
+    cfg = SMOKE_CONFIGS[arch].replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    toks = jax.random.randint(KEY, (2, 12), 0, cfg.vocab_size)
+    full, _, _ = model.forward(params, {"tokens": toks}, mode="train")
+    qp = Q.quantize_params(params, mode)
+    quant, _, _ = model.forward(qp, {"tokens": toks}, mode="train")
+    rel = np.abs(np.asarray(quant) - np.asarray(full)).max() / max(
+        np.abs(np.asarray(full)).max(), 1e-9
+    )
+    assert rel < 0.08, f"quantized logit drift {rel}"
+
+
+def test_quantized_generation_runs():
+    from repro.core import engine, sampling
+
+    cfg = SMOKE_CONFIGS["llama3.2-1b"].replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    qp, _ = Q.autoquant(params, tokens_per_step=2)
+    prompts = jax.random.randint(KEY, (2, 6), 0, cfg.vocab_size)
+    out = engine.generate(model, qp, prompts, max_new_tokens=5)
+    assert out["tokens"].shape == (2, 5)
+
+
+def test_qdense_bias_preserved():
+    p = {"w": jax.random.normal(KEY, (16, 8)), "b": jnp.arange(8.0)}
+    qp = Q.quantize_linear(p, "wo")
+    x = jnp.zeros((3, 16))
+    np.testing.assert_allclose(np.asarray(Q.qdense(qp, x)), np.tile(np.arange(8.0), (3, 1)))

@@ -1,0 +1,76 @@
+"""Roofline analysis unit tests: HLO collective parser + term math."""
+import numpy as np
+
+from repro.configs import CONFIGS, get_shape
+from repro.launch import roofline as rl
+
+HLO = """
+ENTRY %main {
+  %p0 = bf16[256,1024]{1,0} parameter(0)
+  %ag = bf16[4096,1024]{1,0} all-gather(%p0), replica_groups={}
+  %ar = f32[128,128]{1,0} all-reduce(%x), to_apply=%sum
+  %a2a = (bf16[64,64]{1,0}, bf16[64,64]{1,0}) all-to-all(%a, %b)
+  %rs-start = bf16[512]{0} reduce-scatter-start(%y)
+  %cp = u32[16]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %done = bf16[512]{0} all-gather-done(%w)
+  %not_a_collective = bf16[9999,9999]{1,0} dot(%p0, %p0)
+}
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    c = rl.collective_bytes(HLO)
+    assert c["all-gather"] == 4096 * 1024 * 2
+    assert c["all-reduce"] == 128 * 128 * 4
+    assert c["all-to-all"] == 2 * 64 * 64 * 2  # tuple result summed
+    assert c["collective-permute"] == 16 * 4
+    # '-start' counted once; '-done' skipped; dot ignored
+    assert "reduce-scatter" in c
+    assert sum(c.values()) < 9999 * 9999
+
+
+def test_roofline_terms_and_bottleneck():
+    cfg = CONFIGS["llama3.2-1b"]
+    shape = get_shape("decode_32k")
+    rep = rl.analyze(
+        arch="llama3.2-1b", shape=shape, cfg=cfg, mesh_name="16x16",
+        chips=256, cost={"flops": 1e12, "bytes accessed": 1e12},
+        hlo_text=HLO,
+    )
+    assert np.isclose(rep.t_compute, 1e12 / 197e12)
+    assert np.isclose(rep.t_memory, 1e12 / 819e9)
+    assert rep.bottleneck == "memory"
+    assert rep.step_time == rep.t_memory
+    # all-reduce weighted 2x in the collective sum
+    assert rep.collective_bytes_per_device > sum(rep.collectives.values())
+
+
+def test_model_flops_conventions():
+    cfg = CONFIGS["qwen3-moe-30b-a3b"]  # MoE: active != total
+    train = rl.model_flops(cfg, get_shape("train_4k"))
+    prefill = rl.model_flops(cfg, get_shape("prefill_32k"))
+    decode = rl.model_flops(cfg, get_shape("decode_32k"))
+    assert train == 6.0 * cfg.n_params() * 256 * 4096
+    assert prefill == 2.0 * cfg.n_active_params() * 32 * 32768
+    assert decode == 2.0 * cfg.n_active_params() * 128
+    assert cfg.n_active_params() < 0.2 * cfg.n_params()
+
+
+def test_report_table_renders():
+    from repro.launch import report
+
+    rows = [
+        {"status": "skipped", "arch": "a", "shape": "s", "reason": "r"},
+        {
+            "status": "ok", "arch": "b", "shape": "s", "mesh": "16x16",
+            "step": "serve_step", "compile_s": 3.0,
+            "arg_bytes_per_device": 2e9,
+            "roofline": {
+                "t_compute": 1e-3, "t_memory": 2e-3, "t_collective": 0.0,
+                "bottleneck": "memory", "useful_ratio": 0.5,
+                "collectives": {"all-gather": 1e6},
+            },
+        },
+    ]
+    md = report.table(rows)
+    assert "SKIP" in md and "memory" in md and "2.00GB" in md

@@ -1,0 +1,123 @@
+"""Deliverable (f): per assigned architecture, a REDUCED variant of the
+same family (≤2 layers... except hybrid's 3-layer pattern period, d≤512,
+≤4 experts) runs one forward AND one train step on CPU, asserting output
+shapes and no NaNs. Plus one decode step where the family supports it."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, SMOKE_CONFIGS, get_smoke_config
+from repro.models import get_model
+from repro.training import data, optimizer as opt
+from repro.training.train_loop import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+ALL = list(ASSIGNED_ARCHS) + ["hstu"]
+
+
+def _reduced_ok(cfg):
+    assert cfg.d_model <= 512
+    assert cfg.n_layers <= 3
+    if cfg.moe is not None:
+        assert cfg.moe.n_experts <= 4
+
+
+def _batch(cfg, b=2, t=16):
+    batch = {
+        "tokens": jax.random.randint(KEY, (b, t), 0, cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(1), (b, t), 0, cfg.vocab_size),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            KEY, (b, cfg.encdec.n_frames, cfg.d_model)
+        ).astype(jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_smoke_forward(arch):
+    cfg = get_smoke_config(arch)
+    _reduced_ok(cfg)
+    model = get_model(cfg)
+    params = model.init(KEY)
+    b, t = 2, 16
+    logits, _, aux = model.forward(params, _batch(cfg, b, t), mode="train")
+    assert logits.shape == (b, t, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), "NaN/inf in logits"
+    assert bool(jnp.isfinite(aux["aux_loss"]))
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(KEY)
+    ocfg = opt.OptimizerConfig(lr=1e-3, total_steps=10)
+    state = opt.init_state(params, ocfg)
+    step = jax.jit(make_train_step(model, ocfg))
+    batch = _batch(cfg)
+    new_params, new_state, metrics = step(params, state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(new_state.step) == 1
+    # params actually moved
+    moved = any(
+        bool(jnp.any(a != b))
+        for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(params))
+    )
+    assert moved
+
+
+@pytest.mark.parametrize("arch", [a for a in ALL if a != "hstu"])
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(KEY)
+    b = 2
+    batch = _batch(cfg, b, 8)
+    cache = model.init_cache(b, 16)
+    _, cache, _ = model.forward(
+        params, {k: v for k, v in batch.items() if k != "labels"},
+        cache=cache, mode="prefill",
+    )
+    tok = jax.random.randint(KEY, (b, 1), 0, cfg.vocab_size)
+    logits, cache, _ = model.forward(params, {"tokens": tok}, cache=cache, mode="decode")
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+def test_hstu_is_non_autoregressive():
+    cfg = get_smoke_config("hstu")
+    model = get_model(cfg)
+    with pytest.raises(NotImplementedError):
+        model.init_cache(2, 16)
+    params = model.init(KEY)
+    logits, _, aux = model.forward(
+        params, {"tokens": jnp.zeros((2, 16), jnp.int32)}, mode="train"
+    )
+    assert aux["ranking_logits"].shape == (2, 16, 8)
+
+
+def test_scan_layers_equivalence():
+    """Stacked-scan forward == unrolled forward (same init key)."""
+    cfg = SMOKE_CONFIGS["llama3.2-1b"].replace(dtype="float32")
+    m_unroll = get_model(cfg)
+    m_scan = get_model(cfg.replace(scan_layers=True))
+    toks = jax.random.randint(KEY, (2, 10), 0, cfg.vocab_size)
+    # same per-layer keys: manually stack unrolled params into scan layout
+    p_unroll = m_unroll.init(KEY)
+    p_scan = {
+        "embed": p_unroll["embed"],
+        "final_norm": p_unroll["final_norm"],
+        "layers": [],
+        "scanned": jax.tree.map(
+            lambda *xs: jnp.stack(xs), *p_unroll["layers"]
+        ),
+    }
+    l0, _, _ = m_unroll.forward(p_unroll, {"tokens": toks}, mode="train")
+    l1, _, _ = m_scan.forward(p_scan, {"tokens": toks}, mode="train")
+    # logits scale ~200 (tied embeddings); scan/unroll fuse dots
+    # differently so only relative agreement is meaningful
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), rtol=2e-4,
+                               atol=2e-3)

@@ -1,0 +1,165 @@
+"""End-to-end behaviour tests: the serving engines and training loop over
+the public API, exercising the paper's four task profiles (T-T generation,
+S-T beam translation, T-I contrastive image generation, H-A ranking)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_CONFIGS
+from repro.core import engine, sampling
+from repro.models import get_model, vlm
+from repro.training import data, optimizer as opt, train_loop
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = SMOKE_CONFIGS["llama3.2-1b"].replace(dtype="float32")
+    model = get_model(cfg)
+    return model, model.init(KEY)
+
+
+# ------------------------------------------------------------- T-T (Llama)
+def test_generate_shapes_and_determinism(llama):
+    model, params = llama
+    prompts = jax.random.randint(KEY, (3, 8), 0, model.config.vocab_size)
+    a = engine.generate(model, params, prompts, max_new_tokens=10)["tokens"]
+    b = engine.generate(model, params, prompts, max_new_tokens=10)["tokens"]
+    assert a.shape == (3, 10)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_generate_loop_equals_scanned(llama):
+    """Step-by-step serving loop == whole-generation lax.scan program."""
+    model, params = llama
+    prompts = jax.random.randint(KEY, (2, 6), 0, model.config.vocab_size)
+    a = engine.generate(model, params, prompts, max_new_tokens=8,
+                        sampler=sampling.greedy)["tokens"]
+    b = engine.generate_scanned(model, params, prompts, max_new_tokens=8,
+                                sampler=sampling.greedy)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_generate_respects_prompt_lengths(llama):
+    """Right-padded ragged prompts: continuation starts at each prompt's
+    true end, and padding must not influence the result."""
+    model, params = llama
+    v = model.config.vocab_size
+    p1 = jax.random.randint(KEY, (1, 5), 0, v)
+    pad_a = jnp.concatenate([p1, jnp.zeros((1, 3), jnp.int32)], axis=1)
+    pad_b = jnp.concatenate([p1, jnp.full((1, 3), 7, jnp.int32)], axis=1)
+    la = engine.generate(model, params, pad_a,
+                         prompt_lengths=jnp.array([5]), max_new_tokens=6,
+                         sampler=sampling.greedy)["tokens"]
+    lb = engine.generate(model, params, pad_b,
+                         prompt_lengths=jnp.array([5]), max_new_tokens=6,
+                         sampler=sampling.greedy)["tokens"]
+    lc = engine.generate(model, params, p1, max_new_tokens=6,
+                         sampler=sampling.greedy)["tokens"]
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lc))
+
+
+# -------------------------------------------------- S-T (Seamless/Whisper)
+def test_beam_translation_profile():
+    cfg = SMOKE_CONFIGS["whisper-base"].replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    frames = jax.random.normal(KEY, (2, cfg.encdec.n_frames, cfg.d_model))
+    out = engine.generate_beam(
+        model, params, batch=2, n_beams=4, bos_id=1, eos_id=2,
+        max_new_tokens=10, extra_inputs={"frames": frames},
+    )
+    assert out["tokens"].shape == (2, 10)
+    assert np.asarray(out["scores"]).shape == (2,)
+    # beam search with donated reorder == reallocating reorder (Obs #4)
+    out2 = engine.generate_beam(
+        model, params, batch=2, n_beams=4, bos_id=1, eos_id=2,
+        max_new_tokens=10, extra_inputs={"frames": frames},
+        donate_reorder=False,
+    )
+    np.testing.assert_array_equal(np.asarray(out["tokens"]), np.asarray(out2["tokens"]))
+
+
+def test_beam_width_1_equals_greedy():
+    cfg = SMOKE_CONFIGS["whisper-base"].replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    frames = jax.random.normal(KEY, (1, cfg.encdec.n_frames, cfg.d_model))
+    beam = engine.generate_beam(
+        model, params, batch=1, n_beams=1, bos_id=1, eos_id=2,
+        max_new_tokens=6, extra_inputs={"frames": frames},
+    )["tokens"]
+    greedy = engine.generate(
+        model, params, jnp.ones((1, 1), jnp.int32), max_new_tokens=6,
+        sampler=sampling.greedy, extra_inputs={"frames": frames},
+    )["tokens"]
+    np.testing.assert_array_equal(np.asarray(beam[0]), np.asarray(greedy[0]))
+
+
+# ------------------------------------------------- T-I (Chameleon profile)
+def test_contrastive_image_generation():
+    cfg = SMOKE_CONFIGS["chameleon-34b"].replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    off = vlm.image_token_offset(cfg)
+    prompt = jax.random.randint(KEY, (2, 5), 0, off)
+    out = engine.generate_contrastive(
+        model, params, prompt, uncond_token=0,
+        n_image_tokens=cfg.vlm.n_image_tokens, guidance=2.5,
+    )
+    toks = np.asarray(out["tokens"])
+    assert toks.shape == (2, cfg.vlm.n_image_tokens)
+    assert (toks >= off).all(), "T-I must emit only image tokens"
+    assert out["n_steps"] == cfg.vlm.n_image_tokens  # fixed 1024-style loop
+
+
+def test_it_input_builder():
+    cfg = SMOKE_CONFIGS["chameleon-34b"]
+    img = vlm.encode_image_stub(cfg, KEY, batch=2)
+    txt = jnp.zeros((2, 4), jnp.int32)
+    seq = vlm.build_it_input(cfg, img, txt)
+    assert seq.shape == (2, cfg.vlm.n_image_tokens + 4)
+    off = vlm.image_token_offset(cfg)
+    assert (np.asarray(seq[:, : cfg.vlm.n_image_tokens]) >= off).all()
+
+
+# ------------------------------------------------------- H-A (HSTU/gDLRM)
+def test_hstu_ranking_and_retrieval_heads():
+    cfg = SMOKE_CONFIGS["hstu"]
+    model = get_model(cfg)
+    params = model.init(KEY)
+    hist = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    lengths = jnp.array([20, 32])
+    retrieval, _, aux = model.forward(
+        params, {"tokens": hist, "lengths": lengths}, mode="train"
+    )
+    assert retrieval.shape == (2, 32, cfg.vocab_size)
+    assert aux["ranking_logits"].shape == (2, 32, 8)
+
+
+# ------------------------------------------------------------- training
+def test_training_loss_decreases():
+    cfg = SMOKE_CONFIGS["llama3.2-1b"]
+    stream = data.token_stream(cfg, batch=4, seq_len=32, seed=1)
+    first = next(stream)
+
+    def repeat():
+        while True:
+            yield first
+
+    res = train_loop.train(
+        cfg, data=repeat(), steps=10, log_every=100,
+        opt_cfg=opt.OptimizerConfig(lr=3e-3, warmup_steps=2, total_steps=10),
+    )
+    assert res.metrics_history[-1]["loss"] < res.metrics_history[0]["loss"]
+
+
+def test_paper_length_profiles():
+    """Table 2 distributions: sampled lengths respect min/max bounds."""
+    for name, prof in data.PAPER_PROFILES.items():
+        ins, outs = data.sample_lengths(prof, 200, seed=3)
+        assert ins.min() >= prof.in_min and ins.max() <= prof.in_max
+        assert outs.min() >= prof.out_min and outs.max() <= prof.out_max
