@@ -11,6 +11,7 @@ Modules ↔ paper artifacts:
   bench_quant         §4.2 (AutoQuant int8)
   bench_layerskip     Fig 8 (self-speculative decoding)
   bench_hstu          §4.1.1 (fused pointwise attention scaling)
+  bench_serve         Obs #2 (continuous batching vs fixed-slot serving A/B)
   bench_roofline      Fig 9 (three-term roofline, + dry-run table if present)
 """
 from __future__ import annotations
@@ -30,6 +31,7 @@ MODULES = [
     "bench_layerskip",
     "bench_hstu",
     "bench_seamless",
+    "bench_serve",
     "bench_roofline",
 ]
 

@@ -1,6 +1,9 @@
-"""Batched serving driver (deliverable (b)): serve a small model with
-batched requests sampled from the paper's HumanEval length profile, via
-the fixed-slot BatchServer (static-cache prefill + decode executables).
+"""Batched serving driver: serve a small model with requests sampled from
+the paper's HumanEval length profile through the continuous-batching
+scheduler (KV slot-pool + slot-recycling admission; core/scheduler.py).
+
+Pass ``--policy fixed`` to see the seed's run-to-completion baseline on
+the same trace — benchmarks/bench_serve.py measures that A/B properly.
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -12,6 +15,7 @@ def main():
         "--arch", "llama3.2-1b", "--smoke",
         "--n-requests", "8", "--batch-slots", "4", "--max-new", "16",
         "--profile", "llama_humaneval",
+        "--policy", "continuous", "--arrival-rate", "20",
     ])
 
 

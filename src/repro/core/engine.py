@@ -8,8 +8,19 @@ executable, the XLA analogue of CUDA-Graph replay. Decode loops run under
 (``generate_scanned``), or step-by-step from Python for serving
 (``Engine.step``), where the per-step executable is cached by jit.
 
-Engines:
+Step primitives (shared by every engine AND the continuous-batching
+scheduler in core/scheduler.py):
+- ``prefill``     — one jitted prefill program: prompt -> fresh cache +
+                    last-position logits. With batch=1 this is the
+                    scheduler's single-slot refill prefill.
+- ``decode_step`` — one jitted decode-step program (cache donated), the
+                    executable replayed forever.
+
+Engines (thin wrappers over the primitives):
 - ``generate``            — batch top-p/greedy generation (Llama profile).
+                            ``tokens`` is always [B, max_new_tokens]: on
+                            early EOS exit the tail is padded with
+                            ``eos_id`` so callers can slice safely.
 - ``generate_beam``       — beam search with per-step KV reorder
                             (Seamless profile, Obs #4).
 - ``generate_contrastive``— Chameleon T-I: conditional + unconditional
@@ -39,7 +50,10 @@ def _last_logits(logits: jnp.ndarray, prompt_lengths: jnp.ndarray) -> jnp.ndarra
 
 
 @functools.partial(jax.jit, static_argnums=(0, 4))
-def _prefill(model: Model, params, tokens, prompt_lengths, max_len, extra=None):
+def prefill(model: Model, params, tokens, prompt_lengths, max_len, extra=None):
+    """Prompt -> (last-position logits [B, V], fresh cache). One compiled
+    program per (batch, prompt pad, max_len) signature; the scheduler calls
+    it with batch=1 as the single-slot refill prefill."""
     cache = model.init_cache(tokens.shape[0], max_len)
     batch = {"tokens": tokens, "prompt_lengths": prompt_lengths}
     if extra:
@@ -49,11 +63,19 @@ def _prefill(model: Model, params, tokens, prompt_lengths, max_len, extra=None):
 
 
 @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
-def _decode_step(model: Model, params, cache, token):
+def decode_step(model: Model, params, cache, token):
+    """One decode step for every sequence slot: token [B] -> (logits [B, V],
+    cache). The cache is donated, so the executable updates it in place and
+    is replayed forever (§4.1.2 CUDA-Graph-analogue discipline)."""
     logits, cache, _ = model.forward(
         params, {"tokens": token[:, None]}, cache=cache, mode="decode"
     )
     return logits[:, 0], cache
+
+
+# Internal aliases kept for callers predating the public primitives.
+_prefill = prefill
+_decode_step = decode_step
 
 
 def generate(
@@ -67,36 +89,61 @@ def generate(
     key: Optional[jax.Array] = None,
     eos_id: Optional[int] = None,
     extra_inputs: Optional[Dict[str, jnp.ndarray]] = None,
+    live: Optional[jnp.ndarray] = None,
 ) -> Dict[str, jnp.ndarray]:
-    """Python-loop generation (serving style): one jitted prefill + one
-    jitted decode executable replayed per step."""
+    """Python-loop generation (serving style): a thin wrapper over the
+    ``prefill`` / ``decode_step`` primitives replayed per step.
+
+    ``live`` [B] marks which batch rows carry real requests; dead rows
+    (fixed-slot padding) are treated as already finished: they emit only
+    the fill token (``eos_id`` when set, else 0) and never block the
+    all-done early exit. Without ``eos_id`` there is no early exit (live
+    rows can never finish early), but dead-row outputs are still masked.
+
+    Output contract: ``tokens`` is ALWAYS [B, max_new_tokens]. When every
+    live row hits EOS early, the remaining columns are padded with the
+    fill token (``n_steps`` reports the real decode-step count)."""
     b, tp = prompt_tokens.shape
     if prompt_lengths is None:
         prompt_lengths = jnp.full((b,), tp, jnp.int32)
     key = key if key is not None else jax.random.PRNGKey(0)
     max_len = tp + max_new_tokens + 1
 
-    logits, cache = _prefill(
+    logits, cache = prefill(
         model, params, prompt_tokens, prompt_lengths, max_len, extra_inputs
     )
     key, sub = jax.random.split(key)
     token = sampler(logits, sub)
+    # ``fill`` stands in for finished/dead rows: EOS when defined, else 0 —
+    # so the live mask masks garbage even without an EOS id.
+    fill = eos_id if eos_id is not None else 0
+    done = None
+    if eos_id is not None or live is not None:
+        done = jnp.zeros((b,), bool) if live is None else ~live
+        if eos_id is not None:
+            done = done | (token == eos_id)  # the FIRST token may stop a row
+        token = jnp.where(done, fill, token)  # dead rows emit only fill
     out = [token]
-    done = jnp.zeros((b,), bool) if eos_id is not None else None
     for _ in range(max_new_tokens - 1):
-        logits, cache = _decode_step(model, params, cache, token)
+        if done is not None and bool(done.all()):
+            break
+        logits, cache = decode_step(model, params, cache, token)
         key, sub = jax.random.split(key)
         token = sampler(logits, sub)
-        if eos_id is not None:
-            done = done | (token == eos_id)
-            token = jnp.where(done, eos_id, token)
+        if done is not None:
+            if eos_id is not None:
+                done = done | (token == eos_id)
+            token = jnp.where(done, fill, token)
         out.append(token)
-        if eos_id is not None and bool(done.all()):
-            break
+    n_steps = len(out)
+    tokens = jnp.stack(out, axis=1)
+    if n_steps < max_new_tokens:  # early exit: pad, don't go ragged
+        pad = jnp.full((b, max_new_tokens - n_steps), fill, tokens.dtype)
+        tokens = jnp.concatenate([tokens, pad], axis=1)
     return {
-        "tokens": jnp.stack(out, axis=1),
+        "tokens": tokens,
         "cache": cache,
-        "n_steps": len(out),
+        "n_steps": n_steps,
     }
 
 
@@ -117,14 +164,14 @@ def generate_scanned(
     key = key if key is not None else jax.random.PRNGKey(0)
     max_len = tp + max_new_tokens + 1
 
-    logits, cache = _prefill(
+    logits, cache = prefill(
         model, params, prompt_tokens, prompt_lengths, max_len, extra_inputs
     )
     token0 = sampler(logits, key)
 
     def step(carry, sub):
         token, cache = carry
-        logits, cache = _decode_step(model, params, cache, token)
+        logits, cache = decode_step(model, params, cache, token)
         nxt = sampler(logits, sub)
         return (nxt, cache), nxt
 
@@ -163,7 +210,7 @@ def generate_beam(
         }
     prompt = jnp.full((bk, 1), bos_id, jnp.int32)
     lengths = jnp.ones((bk,), jnp.int32)
-    logits, cache = _prefill(
+    logits, cache = prefill(
         model, params, prompt, lengths, max_new_tokens + 2, tiled_extra
     )
 
@@ -172,7 +219,7 @@ def generate_beam(
     token = None
     for step_i in range(max_new_tokens):
         if step_i > 0:
-            logits, cache = _decode_step(model, params, cache, token)
+            logits, cache = decode_step(model, params, cache, token)
         state, beam_idx = sampling.beam_step(
             state, logits, n_beams, eos_id, length_penalty
         )
@@ -212,7 +259,7 @@ def generate_contrastive(
     uncond = jnp.full((b, tp), uncond_token, jnp.int32)
     both = jnp.concatenate([prompt_tokens, uncond], axis=0)
     lengths = jnp.full((2 * b,), tp, jnp.int32)
-    logits, cache = _prefill(
+    logits, cache = prefill(
         model, params, both, lengths, tp + n_image_tokens + 1, None
     )
 
@@ -225,5 +272,5 @@ def generate_contrastive(
         token = sampler(mixed, sub)
         tokens.append(token)
         token2 = jnp.concatenate([token, token], axis=0)
-        logits, cache = _decode_step(model, params, cache, token2)
+        logits, cache = decode_step(model, params, cache, token2)
     return {"tokens": jnp.stack(tokens, axis=1), "n_steps": n_image_tokens}

@@ -52,6 +52,36 @@ def rewind(cache: Any, new_lengths: jnp.ndarray) -> Any:
     return {**cache, "lengths": new_lengths}
 
 
+# --------------------------------------------------------------------------
+# Slot-pool row ops (continuous batching)
+# --------------------------------------------------------------------------
+# Like ``reorder``, these treat every cache leaf's axis 0 as the sequence-
+# slot axis (true for all families; scan_layers stacking is the documented
+# exception and is not used by the serving pool).
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def write_slot(pool: Any, row: Any, slot: jnp.ndarray) -> Any:
+    """Scatter a single-sequence cache (leaves [1, ...]) into sequence slot
+    ``slot`` of a pooled cache (leaves [B, ...]). Donated: XLA updates the
+    pool's buffers in place — refilling a slot never reallocates the pool
+    (the §4.1.2 "keep the memory pointer" discipline applied to admission).
+    ``slot`` is traced, so one compiled executable serves every slot."""
+    from repro.models import attention as A
+
+    return jax.tree.map(lambda p, r: A.write_slot_row(p, r, slot), pool, row)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def reset_slots(pool: Any, mask: jnp.ndarray) -> Any:
+    """Evict the slots marked in ``mask`` [B] by zeroing their ``lengths``
+    (stale K/V beyond the length counter is already masked by the decode
+    validity mask, so buffers need no clearing). Donated in-place update.
+    Note: subsequent pool-wide decode steps re-increment every row's
+    counter, so a freed slot's ``lengths`` drifts until it is re-assigned —
+    liveness belongs to the SlotPool's host free-list, not this counter."""
+    return {**pool, "lengths": jnp.where(mask, 0, pool["lengths"])}
+
+
 def cache_bytes(cache: Any) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
 

@@ -5,6 +5,14 @@ reorder hook), and the contrastive combine used by Chameleon T-I.
 All samplers share the signature ``sample(logits [B, V], key) -> [B]`` so
 the engine can treat them uniformly; beam search is stateful and exposes a
 step function instead.
+
+Continuous-batching serving needs *per-slot* decoding state: each slot in
+the pool belongs to a different request with its own temperature / top-p
+and its own RNG stream. ``sample_slots`` is the vectorized per-slot
+sampler (temperature 0 selects greedy for that slot), and
+``request_key`` / ``slot_step_keys`` derive a key per (request, token
+index) — so a request's random stream is independent of which slot it
+lands in and of what else shares the batch.
 """
 from __future__ import annotations
 
@@ -54,6 +62,48 @@ def top_p(p: float = 0.9, temp: float = 1.0) -> Sampler:
         return jax.random.categorical(key, filtered).astype(jnp.int32)
 
     return sample
+
+
+# --------------------------------------------------------------------------
+# Per-slot sampling (continuous-batching scheduler)
+# --------------------------------------------------------------------------
+
+def request_key(base_key: jax.Array, rid) -> jax.Array:
+    """Per-request RNG key: independent of slot placement and batch mates."""
+    return jax.random.fold_in(base_key, rid)
+
+
+@jax.jit
+def slot_step_keys(
+    base_key: jax.Array, rids: jnp.ndarray, steps: jnp.ndarray
+) -> jax.Array:
+    """Key per slot for its next token: fold (request id, token index) into
+    the serve-level base key. [B] rids, [B] steps -> [B] keys."""
+    req_keys = jax.vmap(lambda r: jax.random.fold_in(base_key, r))(rids)
+    return jax.vmap(jax.random.fold_in)(req_keys, steps)
+
+
+@jax.jit
+def sample_slots(
+    logits: jnp.ndarray,  # [B, V]
+    keys: jax.Array,  # [B] per-slot keys (stacked)
+    temperature: jnp.ndarray,  # [B]; 0 => greedy for that slot
+    top_p: jnp.ndarray,  # [B]; 1 => no nucleus filtering
+) -> jnp.ndarray:
+    """Vectorized per-slot sampler: each pool slot decodes with its own
+    request's (temperature, top_p) and its own RNG stream."""
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    sorted_logits = jnp.sort(scaled, axis=-1)[:, ::-1]
+    sorted_probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(sorted_probs, axis=-1)
+    keep = cum - sorted_probs < top_p[:, None]
+    threshold = jnp.min(
+        jnp.where(keep, sorted_logits, jnp.inf), axis=-1, keepdims=True
+    )
+    filtered = jnp.where(scaled >= threshold, scaled, -jnp.inf)
+    sampled = jax.vmap(jax.random.categorical)(keys, filtered).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy_tok, sampled)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,273 @@
+"""Continuous-batching scheduler: slot recycling over the KV slot-pool.
+
+The paper's Obs #2 pathology is decode-side idle time: auto-regressive
+steps are tiny, so any dead slot in the batch is pure waste. The seed's
+fixed-slot server ran every batch to completion — a slot that hit EOS (or
+a queue shorter than the pool) kept burning decode steps as padding. This
+module is the "system software" fix the paper's 3.88× baseline credits
+(Orca/vLLM-style continuous batching) expressed in the repo's §4.1.2
+static-shape discipline:
+
+- ONE compiled single-slot prefill executable (``engine.prefill`` with
+  batch=1) admits a request into a free slot via the slot-pool's donated
+  row scatter;
+- ONE compiled decode-step executable (``engine.decode_step`` over the
+  whole pool) is replayed forever;
+- on every decode step, finished slots (per-slot EOS / max-new, tracked in
+  ``SlotState``) are evicted immediately and refilled from the waiting
+  queue, so the decode batch is always as full as the queue allows.
+
+``policy="fixed"`` degrades the same machinery to the paper's baseline:
+admission only happens when the pool is completely drained (run-to-
+completion batches), which is the A/B lever ``benchmarks/bench_serve.py``
+measures. Both policies share every compiled program, so the comparison
+isolates scheduling.
+
+Decoder-only families only (no per-request extra inputs; enc-dec serving
+goes through ``engine.generate_beam``).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, sampling
+from repro.core.slot_pool import SlotPool
+from repro.models.registry import Model
+
+
+@dataclass
+class ServeRequest:
+    """One generation request plus its measured lifecycle timestamps
+    (all relative to the scheduler run's t0; ``t_arrival`` is when the
+    request becomes visible to the admission loop)."""
+
+    rid: int
+    prompt: np.ndarray  # [<= pad_to] int token ids
+    max_new: int
+    t_arrival: float = 0.0
+    temperature: float = 0.0  # 0 => greedy
+    top_p: float = 1.0
+    # ---- filled in by the scheduler ----
+    tokens: List[int] = field(default_factory=list)
+    t_admit: Optional[float] = None
+    t_first: Optional[float] = None  # first token (TTFT reference)
+    t_done: Optional[float] = None
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_arrival
+
+    @property
+    def tpot(self) -> float:
+        """Mean time per output token after the first."""
+        n = max(len(self.tokens) - 1, 1)
+        return (self.t_done - self.t_first) / n
+
+    @property
+    def e2e(self) -> float:
+        return self.t_done - self.t_arrival
+
+    def padded_output(self, eos_id: Optional[int]) -> np.ndarray:
+        """[max_new] output, EOS-padded — engine.generate's contract."""
+        pad = eos_id if eos_id is not None else 0
+        out = np.full((self.max_new,), pad, np.int32)
+        out[: len(self.tokens)] = self.tokens
+        return out
+
+
+@dataclass
+class SlotState:
+    """Host-side view of one occupied pool slot."""
+
+    req: ServeRequest
+    slot: int
+    n_generated: int = 0
+
+    def finished(self, token: int, eos_id: Optional[int]) -> bool:
+        return (eos_id is not None and token == eos_id) or (
+            self.n_generated >= self.req.max_new
+        )
+
+
+class Scheduler:
+    """Admission + decode-step loop over a ``SlotPool``.
+
+    The per-slot decoding state (last token, RNG stream index, sampler
+    params) lives in host numpy mirrors and is shipped to the device as
+    ONE small transfer per step — the compiled executables themselves
+    never change shape.
+    """
+
+    def __init__(
+        self,
+        model: Model,
+        params,
+        *,
+        slots: int,
+        pad_to: int,
+        max_new_cap: int,
+        eos_id: Optional[int] = None,
+        policy: str = "continuous",
+        base_key: Optional[jax.Array] = None,
+        clock=time.perf_counter,
+    ):
+        if policy not in ("continuous", "fixed"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.pad_to = pad_to
+        self.max_new_cap = max_new_cap
+        self.max_len = pad_to + max_new_cap + 1
+        self.eos_id = eos_id
+        self.policy = policy
+        self.base_key = base_key if base_key is not None else jax.random.PRNGKey(0)
+        self.clock = clock
+
+        self.pool = SlotPool(model, slots, self.max_len)
+        self.active: Dict[int, SlotState] = {}
+        self.waiting: Deque[ServeRequest] = deque()
+        self.finished: List[ServeRequest] = []
+        # host mirrors of per-slot decode state (free slots: greedy + rid 0;
+        # their sampled tokens are discarded)
+        self._token = np.zeros((slots,), np.int32)
+        self._rid = np.zeros((slots,), np.int32)
+        self._ngen = np.zeros((slots,), np.int32)
+        self._temp = np.zeros((slots,), np.float32)
+        self._top_p = np.ones((slots,), np.float32)
+        # metrics
+        self.n_decode_steps = 0
+        self.n_prefills = 0
+        self.occupancy_trace: List[float] = []
+        self._t0 = self.clock()  # run() rebases; timestamps are offsets
+
+    def _now(self) -> float:
+        return self.clock() - self._t0
+
+    # ---- request intake --------------------------------------------------
+    def submit(self, requests: List[ServeRequest]) -> None:
+        for r in sorted(requests, key=lambda r: r.t_arrival):
+            r.max_new = min(r.max_new, self.max_new_cap)
+            self.waiting.append(r)
+
+    # ---- admission -------------------------------------------------------
+    def _pad_prompt(self, prompt: np.ndarray):
+        p = np.asarray(prompt, np.int32)[: self.pad_to]
+        buf = np.zeros((1, self.pad_to), np.int32)
+        buf[0, : len(p)] = p
+        return jnp.asarray(buf), jnp.asarray([len(p)], jnp.int32)
+
+    def _admit_one(self, req: ServeRequest, now: float) -> None:
+        slot = self.pool.acquire()
+        assert slot is not None
+        tokens, length = self._pad_prompt(req.prompt)
+        logits, row = engine.prefill(
+            self.model, self.params, tokens, length, self.max_len, None
+        )
+        self.pool.assign(slot, row)
+        self.n_prefills += 1
+        if req.temperature <= 0.0:  # greedy: skip the top-p pipeline
+            first = int(sampling.greedy(logits)[0])
+        else:
+            keys = sampling.slot_step_keys(
+                self.base_key, jnp.asarray([req.rid]), jnp.asarray([0])
+            )
+            first = int(
+                sampling.sample_slots(
+                    logits, keys,
+                    jnp.asarray([req.temperature], jnp.float32),
+                    jnp.asarray([req.top_p], jnp.float32),
+                )[0]
+            )
+        req.t_admit, req.t_first = now, self._now()
+        req.tokens.append(first)
+        state = SlotState(req=req, slot=slot, n_generated=1)
+        if state.finished(first, self.eos_id):
+            req.t_done = req.t_first
+            self.finished.append(req)
+            self.pool.evict(slot)
+            return
+        self.active[slot] = state
+        self._token[slot] = first
+        self._rid[slot] = req.rid
+        self._ngen[slot] = 1
+        self._temp[slot] = req.temperature
+        self._top_p[slot] = req.top_p
+
+    def _admit(self, now: float) -> None:
+        if self.policy == "fixed" and self.active:
+            return  # run-to-completion: no refill until the pool drains
+        while (
+            self.waiting
+            and self.waiting[0].t_arrival <= now
+            and self.pool.n_free > 0
+        ):
+            self._admit_one(self.waiting.popleft(), now)
+
+    # ---- decode ----------------------------------------------------------
+    def step(self) -> List[ServeRequest]:
+        """One pool-wide decode step; returns requests finished by it."""
+        logits, cache = engine.decode_step(
+            self.model, self.params, self.pool.cache, jnp.asarray(self._token)
+        )
+        self.pool.cache = cache
+        if not self._temp.any():  # all-greedy pool: skip the top-p pipeline
+            toks = np.asarray(sampling.greedy(logits))
+        else:
+            keys = sampling.slot_step_keys(
+                self.base_key, jnp.asarray(self._rid), jnp.asarray(self._ngen)
+            )
+            toks = np.asarray(
+                sampling.sample_slots(
+                    logits, keys, jnp.asarray(self._temp), jnp.asarray(self._top_p)
+                )
+            )
+        self.n_decode_steps += 1
+        self.occupancy_trace.append(self.pool.occupancy)
+        now = self._now()
+        done: List[ServeRequest] = []
+        for slot, st in list(self.active.items()):
+            token = int(toks[slot])
+            st.req.tokens.append(token)
+            st.n_generated += 1
+            self._token[slot] = token
+            self._ngen[slot] = st.n_generated
+            if st.finished(token, self.eos_id):
+                st.req.t_done = now
+                self.finished.append(st.req)
+                done.append(st.req)
+                del self.active[slot]
+                self.pool.evict(slot)
+                self._temp[slot] = 0.0  # free slots decode greedy garbage
+        return done
+
+    # ---- driver ----------------------------------------------------------
+    def run(self, requests: List[ServeRequest]) -> List[ServeRequest]:
+        """Serve ``requests`` to completion; returns them in finish order.
+        Arrival offsets are honored against the wall clock: a request is
+        invisible to admission until ``t0 + t_arrival``."""
+        self.submit(requests)
+        self._t0 = self.clock()
+        while self.waiting or self.active:
+            self._admit(self._now())
+            if not self.active:
+                if self.waiting:  # pool idle, next request not arrived yet
+                    wait = self.waiting[0].t_arrival - self._now()
+                    if wait > 0:
+                        time.sleep(min(wait, 1e-3))
+                continue
+            self.step()
+        return self.finished
+
+    @property
+    def mean_occupancy(self) -> float:
+        if not self.occupancy_trace:
+            return 0.0
+        return float(np.mean(self.occupancy_trace))

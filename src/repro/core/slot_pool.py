@@ -1,0 +1,86 @@
+"""Unified KV slot-pool: the static cache as a pool of sequence slots.
+
+The paper's §4.1.2 static-shape discipline allocates ONE cache of shape
+[slots, max_len, ...] and never reallocates it. Continuous batching
+(Orca/vLLM-style) reinterprets that same allocation as ``slots``
+*independent* sequence slots: each slot carries its own request, its own
+``lengths`` counter, and can be evicted + refilled without touching its
+neighbours — because every per-slot cache op in models/attention.py
+(``write_decode``/``write_extend``/``write_slot_row``) and every validity
+mask is already row-wise.
+
+``SlotPool`` owns the pooled cache plus a host-side free-list. All device
+updates are donated jitted programs (kv_cache.write_slot / reset_slots),
+so admission and eviction replay two tiny compiled executables and the
+pool's buffers are updated in place — the engine/scheduler/serve layers
+above never see a reallocation.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax.numpy as jnp
+
+from repro.core import kv_cache
+from repro.models.registry import Model
+
+
+class SlotPool:
+    """Fixed pool of ``slots`` sequence slots backed by one static cache.
+
+    Invariants:
+    - a slot is either on the free-list or assigned to exactly one request;
+    - the HOST free-list is the sole source of truth for slot liveness:
+      ``evict`` zeroes a freed slot's ``lengths``, but the pool-wide decode
+      step still increments every row's counter, so a free slot's device
+      counter drifts upward until ``assign`` overwrites it (its garbage
+      compute is the dead padding continuous batching shrinks — never
+      derive liveness from the device-side ``lengths``);
+    - ``assign`` replaces a slot's entire cache row (K/V buffers *and*
+      length counter) with a freshly prefilled single-sequence row.
+    """
+
+    def __init__(self, model: Model, slots: int, max_len: int):
+        if slots < 1:
+            raise ValueError("slot pool needs at least one slot")
+        self.model = model
+        self.slots = slots
+        self.max_len = max_len
+        self.cache: Any = model.init_cache(slots, max_len)
+        self._free: List[int] = list(range(slots - 1, -1, -1))  # pop() -> lowest
+
+    # ---- free-list -------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.slots - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of slots doing real work this step (1 - idle share)."""
+        return self.n_active / self.slots
+
+    def acquire(self) -> Optional[int]:
+        """Claim a free slot (lowest index first), or None if full."""
+        return self._free.pop() if self._free else None
+
+    # ---- device-side slot ops (donated, in-place) ------------------------
+    def assign(self, slot: int, row_cache: Any) -> None:
+        """Install a prefilled single-sequence cache (leaves [1, ...]) into
+        ``slot``. The row's ``lengths[0]`` becomes the slot's counter."""
+        self.cache = kv_cache.write_slot(self.cache, row_cache, jnp.int32(slot))
+
+    def evict(self, slot: int) -> None:
+        """Finish a slot: zero its length and return it to the free-list."""
+        mask = jnp.zeros((self.slots,), bool).at[slot].set(True)
+        self.cache = kv_cache.reset_slots(self.cache, mask)
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+
+    def reset(self) -> None:
+        """Evict everything (serve-loop restart)."""
+        self.cache = kv_cache.reset_slots(self.cache, jnp.ones((self.slots,), bool))
+        self._free = list(range(self.slots - 1, -1, -1))

@@ -128,6 +128,15 @@ def _compile_spec(spec, cfg, shape, mesh, *, cache_seq_shard, fsdp,
     return compiled, arg_specs
 
 
+def _cost_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jaxlib versions: newer
+    releases return a flat dict, older ones a one-element list of dicts."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def _extrapolated_costs(arch, shape, cfg, mesh, *, cache_seq_shard, fsdp,
                         quant=None, enable_tp=None, pure_fsdp=False):
     """XLA's cost_analysis counts a lax.scan (while-loop) body ONCE
@@ -148,7 +157,7 @@ def _extrapolated_costs(arch, shape, cfg, mesh, *, cache_seq_shard, fsdp,
             rspec, rcfg, shape, mesh, cache_seq_shard=cache_seq_shard,
             fsdp=fsdp, enable_tp=enable_tp, pure_fsdp=pure_fsdp,
         )
-        cost = dict(compiled.cost_analysis() or {})
+        cost = _cost_dict(compiled)
         colls = rl.collective_bytes(compiled.as_text())
         samples.append((cost, colls))
     (c1, k1), (c2, k2) = samples
@@ -275,14 +284,14 @@ def run_pair(
             )
             notes = "depth-extrapolated"
         except Exception as e:  # fall back to raw (under-counted) costs
-            cost = dict(compiled.cost_analysis() or {})
+            cost = _cost_dict(compiled)
             report = rl.analyze(
                 arch=arch, shape=shape, cfg=cfg, mesh_name=mesh_name,
                 chips=chips, cost=cost, hlo_text=compiled.as_text(),
                 notes=f"raw scan costs (extrapolation failed: {e})",
             )
     else:
-        cost = dict(compiled.cost_analysis() or {})
+        cost = _cost_dict(compiled)
         report = rl.analyze(
             arch=arch, shape=shape, cfg=cfg, mesh_name=mesh_name, chips=chips,
             cost=cost, hlo_text=compiled.as_text(),

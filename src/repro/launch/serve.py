@@ -1,12 +1,26 @@
-"""Serving launcher: batched request serving with the static-cache engine.
+"""Serving launcher: continuous-batching request serving over the KV
+slot-pool (core/slot_pool.py + core/scheduler.py).
 
-Implements the paper's inference pipeline end to end: a request queue,
-fixed-slot batching (prompts right-padded into the batch), one compiled
-prefill + one compiled decode-step executable, per-task decoding strategy
-(top-p for T-T/VLM, beam for enc-dec, contrastive for T-I).
+The serving stack is the paper's inference pipeline run as a persistent
+engine: ONE compiled single-slot prefill executable admits requests into
+free slots, ONE compiled pool-wide decode-step executable is replayed
+forever, and the scheduler recycles slots the moment a request finishes
+(per-slot EOS / max-new) — so the decode batch stays as full as the queue
+allows (the Obs #2 idle-time lever). ``--policy fixed`` degrades the same
+machinery to the seed's run-to-completion batcher for A/B comparison.
+
+Reported per request: TTFT (arrival -> first token), TPOT (mean inter-
+token), e2e latency; aggregate: tokens/s and mean slot-occupancy (the
+direct idle-time metric — fraction of decode-slot work that was real).
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-      --n-requests 8 --batch-slots 4 --max-new 16
+      --n-requests 8 --batch-slots 4 --max-new 16 --arrival-rate 16
+
+The legacy fixed-slot batcher (``BatchServer``) is kept as the thin
+``engine.generate`` front-end (and its live-mask test coverage); the A/B
+benchmark's baseline arm is ``Scheduler(policy="fixed")``, NOT this class.
+Partial batches now mask dead slots via ``live`` (garbage rows emit only
+the fill token and never block the EOS early-exit).
 """
 from __future__ import annotations
 
@@ -21,6 +35,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.core import engine, sampling
+from repro.core.scheduler import Scheduler, ServeRequest
 from repro.models import get_model
 from repro.training import data as data_mod
 
@@ -36,16 +51,18 @@ class Request:
 
 
 class BatchServer:
-    """Fixed-slot batcher: pulls up to ``slots`` requests, right-pads the
-    prompts, runs prefill + decode with per-slot prompt lengths. (The
-    static-shape discipline means every batch reuses the same two
-    executables — the §4.1.2 lever at serving granularity.)"""
+    """Fixed-slot batcher (the paper's unoptimized baseline): pulls up to
+    ``slots`` requests, right-pads the prompts, runs prefill + decode to
+    completion. Partial batches mask their dead slots (``live``) so padding
+    rows neither block the EOS early-exit nor leak garbage outputs."""
 
-    def __init__(self, model, params, *, slots: int, sampler=None):
+    def __init__(self, model, params, *, slots: int, sampler=None,
+                 eos_id: Optional[int] = None):
         self.model = model
         self.params = params
         self.slots = slots
         self.sampler = sampler or sampling.top_p(0.9)
+        self.eos_id = eos_id
 
     def serve(self, requests: List[Request], *, pad_to: int, max_new: int):
         done: List[Request] = []
@@ -55,22 +72,117 @@ class BatchServer:
             queue = queue[self.slots:]
             prompts = np.zeros((self.slots, pad_to), np.int32)
             lengths = np.ones((self.slots,), np.int32)
+            live = np.zeros((self.slots,), bool)
             for i, r in enumerate(batch):
                 p = r.prompt[:pad_to]
                 prompts[i, : len(p)] = p
                 lengths[i] = len(p)
+                live[i] = True
             out = engine.generate(
                 self.model, self.params, jnp.asarray(prompts),
                 prompt_lengths=jnp.asarray(lengths),
                 max_new_tokens=max_new, sampler=self.sampler,
                 key=jax.random.PRNGKey(len(done)),
+                eos_id=self.eos_id, live=jnp.asarray(live),
             )
-            toks = np.asarray(out["tokens"])
+            toks = np.asarray(out["tokens"])  # always [slots, max_new]
             for i, r in enumerate(batch):
                 r.output = toks[i, : r.max_new]
                 r.t_done = time.perf_counter()
                 done.append(r)
         return done
+
+
+# --------------------------------------------------------------------------
+# trace + metrics
+# --------------------------------------------------------------------------
+
+def poisson_trace(
+    profile: data_mod.LengthProfile,
+    n_requests: int,
+    *,
+    pad_to: int,
+    max_new_cap: int,
+    vocab_size: int,
+    arrival_rate: float,
+    seed: int = 0,
+    temperature: float = 0.0,
+    top_p: float = 1.0,
+) -> List[ServeRequest]:
+    """Requests with paper-profile lengths and Poisson (exponential
+    inter-arrival) arrival offsets; rate <= 0 means all arrive at t=0."""
+    rng = np.random.default_rng(seed)
+    ins, outs = data_mod.sample_lengths(profile, n_requests, seed=seed + 1)
+    t = 0.0
+    reqs = []
+    for i in range(n_requests):
+        if arrival_rate > 0:
+            t += rng.exponential(1.0 / arrival_rate)
+        reqs.append(
+            ServeRequest(
+                rid=i,
+                prompt=rng.integers(0, vocab_size, size=min(int(ins[i]), pad_to)),
+                max_new=max(1, min(int(outs[i]), max_new_cap)),
+                t_arrival=t if arrival_rate > 0 else 0.0,
+                temperature=temperature,
+                top_p=top_p,
+            )
+        )
+    return reqs
+
+
+def serve_metrics(done: List[ServeRequest], wall: float) -> Dict[str, float]:
+    total_tok = sum(len(r.tokens) for r in done)
+    ttft = [r.ttft for r in done]
+    tpot = [r.tpot for r in done if len(r.tokens) > 1]
+    e2e = [r.e2e for r in done]
+    return {
+        "n_requests": len(done),
+        "total_tokens": total_tok,
+        "tokens_per_s": total_tok / max(wall, 1e-9),
+        "ttft_p50_ms": float(np.percentile(ttft, 50)) * 1e3,
+        "ttft_p99_ms": float(np.percentile(ttft, 99)) * 1e3,
+        "tpot_p50_ms": (float(np.percentile(tpot, 50)) * 1e3) if tpot else 0.0,
+        "e2e_p50_s": float(np.percentile(e2e, 50)),
+        "e2e_p99_s": float(np.percentile(e2e, 99)),
+    }
+
+
+def run_scheduler(
+    model, params, requests: List[ServeRequest], *,
+    slots: int, pad_to: int, max_new_cap: int,
+    eos_id: Optional[int] = None, policy: str = "continuous",
+    seed: int = 0,
+) -> Dict[str, float]:
+    """Serve one trace; returns metrics (plus the scheduler's counters)."""
+    sched = Scheduler(
+        model, params, slots=slots, pad_to=pad_to, max_new_cap=max_new_cap,
+        eos_id=eos_id, policy=policy, base_key=jax.random.PRNGKey(seed),
+    )
+    t0 = time.perf_counter()
+    done = sched.run(requests)
+    wall = time.perf_counter() - t0
+    m = serve_metrics(done, wall)
+    m.update(
+        wall_s=wall,
+        decode_steps=sched.n_decode_steps,
+        prefills=sched.n_prefills,
+        mean_slot_occupancy=sched.mean_occupancy,
+    )
+    return m
+
+
+def warmup(model, params, *, slots: int, pad_to: int, max_new_cap: int) -> None:
+    """Compile the three serving executables (single-slot prefill, pool
+    decode step, slot scatter) before any timed run."""
+    sched = Scheduler(
+        model, params, slots=slots, pad_to=pad_to, max_new_cap=max_new_cap
+    )
+    rng = np.random.default_rng(0)
+    sched.run([
+        ServeRequest(rid=0, prompt=rng.integers(0, 8, size=pad_to), max_new=2),
+        ServeRequest(rid=1, prompt=rng.integers(0, 8, size=3), max_new=2),
+    ])
 
 
 def main(argv=None):
@@ -80,6 +192,15 @@ def main(argv=None):
     ap.add_argument("--n-requests", type=int, default=8)
     ap.add_argument("--batch-slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--policy", choices=["continuous", "fixed"],
+                    default="continuous")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrivals per second; 0 = all at t=0")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature; 0 = greedy")
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--profile", default="llama_humaneval",
                     choices=sorted(data_mod.PAPER_PROFILES))
     args = ap.parse_args(argv)
@@ -87,31 +208,29 @@ def main(argv=None):
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
 
     prof = data_mod.PAPER_PROFILES[args.profile]
-    ins, _ = data_mod.sample_lengths(prof, args.n_requests, seed=1)
+    ins, _ = data_mod.sample_lengths(prof, args.n_requests, seed=args.seed + 1)
     pad_to = int(min(max(ins), 256))
-    reqs = [
-        Request(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab_size, size=min(int(n), pad_to)),
-            max_new=args.max_new,
-        )
-        for i, n in enumerate(ins)
-    ]
-    server = BatchServer(model, params, slots=args.batch_slots)
-    t0 = time.perf_counter()
-    done = server.serve(reqs, pad_to=pad_to, max_new=args.max_new)
-    wall = time.perf_counter() - t0
-    lat = [r.t_done - r.t_submit for r in done]
-    total_tok = sum(len(r.output) for r in done)
-    print(f"[serve] {len(done)} requests in {wall:.2f}s | "
-          f"{total_tok / wall:.1f} tok/s | "
-          f"latency p50={np.percentile(lat, 50):.2f}s "
-          f"p99={np.percentile(lat, 99):.2f}s")
-    for r in done[:3]:
-        print(f"  req{r.rid}: prompt_len={len(r.prompt)} -> {r.output[:8]}...")
+    reqs = poisson_trace(
+        prof, args.n_requests, pad_to=pad_to, max_new_cap=args.max_new,
+        vocab_size=cfg.vocab_size, arrival_rate=args.arrival_rate,
+        seed=args.seed, temperature=args.temperature, top_p=args.top_p,
+    )
+    warmup(model, params, slots=args.batch_slots, pad_to=pad_to,
+           max_new_cap=args.max_new)
+    m = run_scheduler(
+        model, params, reqs, slots=args.batch_slots, pad_to=pad_to,
+        max_new_cap=args.max_new, eos_id=args.eos_id, policy=args.policy,
+        seed=args.seed,
+    )
+    print(f"[serve/{args.policy}] {m['n_requests']} requests in "
+          f"{m['wall_s']:.2f}s | {m['tokens_per_s']:.1f} tok/s | "
+          f"occupancy={m['mean_slot_occupancy']:.2f} | "
+          f"ttft p50={m['ttft_p50_ms']:.0f}ms p99={m['ttft_p99_ms']:.0f}ms | "
+          f"tpot p50={m['tpot_p50_ms']:.1f}ms | "
+          f"e2e p50={m['e2e_p50_s']:.2f}s p99={m['e2e_p99_s']:.2f}s")
+    return m
 
 
 if __name__ == "__main__":

@@ -69,6 +69,16 @@ def write_extend(buf: jnp.ndarray, new: jnp.ndarray, idx: jnp.ndarray) -> jnp.nd
     return jax.vmap(one)(buf, new, idx)
 
 
+def write_slot_row(buf: jnp.ndarray, row: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
+    """Replace one sequence slot of a pooled buffer: buf [B, ...] gets
+    row [1, ...] at batch index ``slot`` (traced, so one executable serves
+    every slot). This is the continuous-batching refill write: a freshly
+    prefilled single-sequence cache row drops into the shared pool."""
+    return jax.lax.dynamic_update_slice(
+        buf, row.astype(buf.dtype), (slot,) + (0,) * (buf.ndim - 1)
+    )
+
+
 def valid_counts(lengths: jnp.ndarray, cache_len: int) -> jnp.ndarray:
     return jnp.minimum(lengths, cache_len)
 

@@ -1,0 +1,29 @@
+"""Optional-hypothesis shim.
+
+The container image does not always ship ``hypothesis``; the seed suite
+failed at *collection* because of the bare import. Importing ``given`` /
+``hst`` / ``settings`` from here keeps property tests running when
+hypothesis is installed and turns them into clean skips when it is not.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as hst  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any strategies.<name>(...) call at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    hst = _AnyStrategy()
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*a, **k):
+        return lambda f: f

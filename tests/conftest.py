@@ -4,7 +4,11 @@ import os
 # 512 placeholder devices, in its own subprocess.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-from hypothesis import settings
+try:
+    from hypothesis import settings
+except ImportError:  # property tests skip themselves via tests/_hyp.py
+    settings = None
 
-settings.register_profile("repro", deadline=None, max_examples=15)
-settings.load_profile("repro")
+if settings is not None:
+    settings.register_profile("repro", deadline=None, max_examples=15)
+    settings.load_profile("repro")

@@ -189,3 +189,53 @@ def test_cache_bytes_accounting():
     # 2 layers * (k+v) * [2, 16, 2, 32] bf16 + lengths
     expect = 2 * 2 * 2 * 16 * 2 * 32 * 2 + 2 * 4
     assert kv_cache.cache_bytes(cache) == expect
+
+
+def test_cache_token_bytes_rate():
+    """Per-token per-sequence cache rate (Fig 1 accounting): total bytes
+    normalized by batch * seq for the >=3-dim (sequence) leaves."""
+    cfg = SMOKE_CONFIGS["llama3.2-1b"]
+    model = get_model(cfg)
+    b, s = 2, 16
+    cache = model.init_cache(b, s)
+    want = kv_cache.cache_bytes(cache) / (b * s)
+    assert kv_cache.cache_token_bytes(cache) == pytest.approx(want)
+    # MLA's latent cache is per-token smaller than GQA K/V at equal widths
+    assert kv_cache.cache_token_bytes({}) == 0.0
+    assert kv_cache.cache_token_bytes({"lengths": cache["lengths"]}) == 0.0
+
+
+def test_rewind_is_length_only():
+    """rewind must touch ONLY the lengths counter: buffers stay aliased so
+    speculative rollback never copies cache memory."""
+    cfg = SMOKE_CONFIGS["llama3.2-1b"]
+    model = get_model(cfg)
+    cache = model.init_cache(2, 8)
+    cache["lengths"] = jnp.array([5, 7], jnp.int32)
+    back = kv_cache.rewind(cache, jnp.array([3, 4], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(back["lengths"]), [3, 4])
+    for a, b in zip(jax.tree.leaves(cache["layers"]), jax.tree.leaves(back["layers"])):
+        assert a is b  # same arrays, no copy
+    # original cache object is not mutated
+    np.testing.assert_array_equal(np.asarray(cache["lengths"]), [5, 7])
+
+
+def test_write_slot_and_reset_slots_roundtrip():
+    """Slot-pool row ops: scatter a single-sequence cache into one slot,
+    then evict it; neighbours must be untouched throughout."""
+    cfg = _f32(SMOKE_CONFIGS["llama3.2-1b"])
+    model = get_model(cfg)
+    params = model.init(KEY)
+    pool = model.init_cache(3, 8)
+    toks = jax.random.randint(KEY, (1, 4), 0, cfg.vocab_size)
+    row = model.init_cache(1, 8)
+    _, row, _ = model.forward(params, {"tokens": toks}, cache=row, mode="prefill")
+
+    pool2 = kv_cache.write_slot(jax.tree.map(jnp.copy, pool), row, jnp.int32(2))
+    np.testing.assert_array_equal(np.asarray(pool2["lengths"]), [0, 0, 4])
+    for p, r in zip(jax.tree.leaves(pool2["layers"]), jax.tree.leaves(row["layers"])):
+        np.testing.assert_array_equal(np.asarray(p)[2], np.asarray(r)[0])
+        assert (np.asarray(p)[:2] == 0).all()
+
+    pool3 = kv_cache.reset_slots(pool2, jnp.array([False, False, True]))
+    np.testing.assert_array_equal(np.asarray(pool3["lengths"]), [0, 0, 0])

@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as hst
+from _hyp import given, settings, hst
 
 from repro.kernels import ops, ref
 

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as hst
+from _hyp import given, hst
 
 from repro.configs import SMOKE_CONFIGS
 from repro.core import quantization as Q

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as hst
+from _hyp import given, hst
 
 from repro.core import sampling
 
