@@ -1,19 +1,27 @@
 """Continuous batching vs fixed-slot run-to-completion — the serving A/B
-the paper's Obs #2 calls for (decode-side idle time as dead batch slots).
+the paper's Obs #2 calls for (decode-side idle time as dead batch slots) —
+plus the paged KV arm (Fig 1: KV capacity, not FLOPs, bounds the batch).
 
-Both arms serve the SAME Poisson arrival trace with the SAME compiled
-prefill / decode-step executables; only the admission policy differs:
+All arms serve the SAME Poisson arrival trace with the SAME compiled
+prefill / decode-step executables; only the admission policy and the KV
+allocation differ:
 
   fixed       admit a batch, run it to completion (the seed's BatchServer
               behavior — slots that finish early idle as padding)
   continuous  evict finished slots every step and refill from the queue
+  paged       continuous admission over the BlockPool: per-slot block
+              tables into one shared [num_blocks, block_size, ...] pool
+              instead of per-slot [pad_to + max_new_cap] reservations
 
-Rows report tokens/s, mean slot-occupancy (fraction of decode-slot work
-that was real), and the continuous/fixed speedup. The output-length spread
-comes from the paper's seamless_s2t profile (Table 2: 15-98 tokens) so
-run-to-completion actually pays the straggler tax.
+Rows report tokens/s, mean slot-occupancy, the continuous/fixed speedup,
+and the paged arm's reserved-KV-bytes ratio vs contiguous (the gate:
+token-identical outputs at >= 30% lower reservation). The output-length
+spread comes from the paper's seamless_s2t profile (Table 2: 15-98
+tokens) so run-to-completion actually pays the straggler tax and paged
+reservations actually go unused under contiguous slots.
 
   PYTHONPATH=src python benchmarks/bench_serve.py --smoke
+  PYTHONPATH=src python benchmarks/bench_serve.py --smoke --paged
 """
 from __future__ import annotations
 
@@ -39,9 +47,16 @@ N_REQUESTS = 24
 PAD_TO = 16
 MAX_NEW_CAP = 64
 PROFILE = "seamless_s2t"  # widest small output-length spread in Table 2
+BLOCK_SIZE = 16
+# contiguous reserves SLOTS * (PAD_TO + MAX_NEW_CAP + 1) = 324 token rows;
+# 14 blocks * 16 = 224 reserved tokens => ~31% lower, and 13 usable blocks
+# still serve the whole trace (occasional preemption recomputes, never
+# changes tokens)
+NUM_BLOCKS = 14
 
 
-def _ab(n_requests: int = N_REQUESTS, arrival_rate: float = 200.0, seed: int = 0):
+def _ab(n_requests: int = N_REQUESTS, arrival_rate: float = 200.0, seed: int = 0,
+        arms=("fixed", "continuous")):
     cfg = SMOKE_CONFIGS[ARCH].replace(dtype="float32")
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -56,18 +71,34 @@ def _ab(n_requests: int = N_REQUESTS, arrival_rate: float = 200.0, seed: int = 0
     serve.warmup(model, params, slots=SLOTS, pad_to=PAD_TO,
                  max_new_cap=MAX_NEW_CAP)
     results = {}
-    for policy in ("fixed", "continuous"):
-        results[policy] = serve.run_scheduler(
+    tokens = {}
+    for policy in (a for a in arms if a != "paged"):
+        results[policy], done = serve.run_scheduler(
             model, params, trace(), slots=SLOTS, pad_to=PAD_TO,
             max_new_cap=MAX_NEW_CAP, policy=policy, seed=seed,
+            return_requests=True,
         )
-    return results
+        tokens[policy] = {r.rid: list(r.tokens) for r in done}
+    if "paged" in arms:
+        serve.warmup(model, params, slots=SLOTS, pad_to=PAD_TO,
+                     max_new_cap=MAX_NEW_CAP, paged=True,
+                     block_size=BLOCK_SIZE, num_blocks=NUM_BLOCKS)
+        results["paged"], done = serve.run_scheduler(
+            model, params, trace(), slots=SLOTS, pad_to=PAD_TO,
+            max_new_cap=MAX_NEW_CAP, policy="continuous", seed=seed,
+            paged=True, block_size=BLOCK_SIZE, num_blocks=NUM_BLOCKS,
+            return_requests=True,
+        )
+        tokens["paged"] = {r.rid: list(r.tokens) for r in done}
+    return results, tokens
 
 
 def bench() -> list[Row]:
-    r = _ab()
-    fx, ct = r["fixed"], r["continuous"]
+    r, toks = _ab(arms=("fixed", "continuous", "paged"))
+    fx, ct, pg = r["fixed"], r["continuous"], r["paged"]
     speedup = ct["tokens_per_s"] / max(fx["tokens_per_s"], 1e-9)
+    mem_ratio = pg["kv_reserved_bytes"] / max(ct["kv_reserved_bytes"], 1)
+    equiv = toks["paged"] == toks["continuous"]
     return emit([
         ("serve/fixed_tokens_per_s", fx["wall_s"] * 1e6,
          f"{fx['tokens_per_s']:.1f} tok/s occ={fx['mean_slot_occupancy']:.2f} "
@@ -78,6 +109,14 @@ def bench() -> list[Row]:
         ("serve/continuous_speedup", 0.0,
          f"{speedup:.2f}x tok/s; occupancy "
          f"{fx['mean_slot_occupancy']:.2f} -> {ct['mean_slot_occupancy']:.2f}"),
+        ("serve/paged_tokens_per_s", pg["wall_s"] * 1e6,
+         f"{pg['tokens_per_s']:.1f} tok/s block_occ="
+         f"{pg['mean_block_occupancy']:.2f} preempt={pg['n_preemptions']}"),
+        ("serve/paged_kv_reserved_ratio", 0.0,
+         f"{mem_ratio:.2f}x reserved bytes "
+         f"({pg['kv_reserved_bytes'] / 1e6:.1f}MB vs "
+         f"{ct['kv_reserved_bytes'] / 1e6:.1f}MB), "
+         f"token-identical={equiv}"),
     ])
 
 
@@ -85,16 +124,46 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small fixed workload + pass/fail gate")
+    ap.add_argument("--paged", action="store_true",
+                    help="add the paged BlockPool arm + its memory gate")
     ap.add_argument("--n-requests", type=int, default=N_REQUESTS)
     ap.add_argument("--arrival-rate", type=float, default=200.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.paged:
+        # paged leg: continuous + paged arms only; every gate is
+        # deterministic (token equality + reserved bytes — no wall clock,
+        # no retry, and no duplicate fixed-arm run in CI)
+        r, toks = _ab(args.n_requests, args.arrival_rate, args.seed,
+                      arms=("continuous", "paged"))
+        ct, pg = r["continuous"], r["paged"]
+        mem_ratio = pg["kv_reserved_bytes"] / max(ct["kv_reserved_bytes"], 1)
+        equiv = toks["paged"] == toks["continuous"]
+        print(f"continuous: {ct['tokens_per_s']:8.1f} tok/s  "
+              f"occupancy={ct['mean_slot_occupancy']:.2f}  "
+              f"steps={ct['decode_steps']}  wall={ct['wall_s']:.2f}s")
+        print(f"paged:      {pg['tokens_per_s']:8.1f} tok/s  "
+              f"block_occ={pg['mean_block_occupancy']:.2f}  "
+              f"preemptions={pg['n_preemptions']}  "
+              f"reserved={mem_ratio:.2f}x "
+              f"({pg['kv_reserved_bytes'] / 1e6:.1f}MB vs "
+              f"{ct['kv_reserved_bytes'] / 1e6:.1f}MB)  "
+              f"token-identical={equiv}")
+        if not args.smoke:
+            return 0
+        ok = (equiv and mem_ratio <= 0.70
+              and pg["n_requests"] == ct["n_requests"])
+        print("SMOKE " + ("PASS" if ok else
+                          "FAIL: need paged token-identical to continuous "
+                          "at <=0.70x reserved KV bytes"))
+        return 0 if ok else 1
+
     # the gate compares wall-clock tok/s, so one retry absorbs transient
     # machine noise (shared CI runners); steps/occupancy are stable
     attempts = 2 if args.smoke else 1
     for attempt in range(attempts):
-        r = _ab(args.n_requests, args.arrival_rate, args.seed)
+        r, _ = _ab(args.n_requests, args.arrival_rate, args.seed)
         fx, ct = r["fixed"], r["continuous"]
         speedup = ct["tokens_per_s"] / max(fx["tokens_per_s"], 1e-9)
         print(f"fixed:      {fx['tokens_per_s']:8.1f} tok/s  "

@@ -18,6 +18,36 @@ this module owns the cross-cutting operations:
 - ``DynamicCache``     — concat-grown cache that changes shape every step,
                          forcing an XLA recompile per token: the JAX
                          equivalent of the paper's eager-PyTorch baseline.
+
+Block-table addressing vs the §4.1.2 contiguous discipline
+----------------------------------------------------------
+The paper's static-cache discipline reserves ``max_len`` tokens per
+sequence up front so every decode step replays one executable. Under the
+serving pool that reservation is ``pad_to + max_new_cap`` tokens per slot
+— reserved-but-unused memory whenever a request stops early, and Fig 1
+shows KV capacity (not FLOPs) is what bounds the decode batch. The paged
+variant (vLLM-style, arXiv:2407.09111) keeps the static-shape discipline
+but drops the per-slot reservation:
+
+- ONE static K/V allocation per layer, shaped ``[num_blocks, block_size,
+  heads, dim]`` — physical *blocks*, not per-slot rows;
+- a per-slot **block table** ``[slots, max_blocks]`` int32 mapping logical
+  block ``t // block_size`` to a physical block id. The table is tiny,
+  lives in host numpy, and is shipped to the device each step — the
+  compiled executables never change shape as slots grow or shrink;
+- physical block 0 is a reserved **garbage sink**: a freed slot's table
+  rows are zeroed, so the pool-wide decode step's write for that slot
+  lands in block 0 and can never corrupt a live neighbour (the paged
+  analogue of the contiguous pool's "dead rows decode garbage" rule);
+- freed blocks need no device-side clearing: a block is only re-readable
+  after its new owner's validity mask covers the positions it rewrote
+  (growth blocks are allocated exactly when the write cursor enters them).
+
+Ops: ``append_block`` copies one block-sized chunk of a prefilled dense
+row into a physical block (donated; block id and source offset are traced
+so one executable serves every copy); ``free_blocks`` zeroes freed slots'
+length counters (the block table itself is host state); ``set_slot_length``
+installs a newly admitted slot's counter.
 """
 from __future__ import annotations
 
@@ -80,6 +110,54 @@ def reset_slots(pool: Any, mask: jnp.ndarray) -> Any:
     counter, so a freed slot's ``lengths`` drifts until it is re-assigned —
     liveness belongs to the SlotPool's host free-list, not this counter."""
     return {**pool, "lengths": jnp.where(mask, 0, pool["lengths"])}
+
+
+# --------------------------------------------------------------------------
+# Paged block-pool ops (see module docstring: block-table addressing)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def append_block(pool_layers: Any, row_layers: Any, block: jnp.ndarray,
+                 start: jnp.ndarray) -> Any:
+    """Copy one block-sized chunk of a prefilled dense row into physical
+    block ``block`` of a paged pool. ``pool_layers`` leaves are
+    [num_blocks, block_size, ...], ``row_layers`` leaves [1, S_row, ...];
+    the chunk is ``row[0, start : start + block_size]``. Donated, and both
+    ``block`` and ``start`` are traced, so ONE compiled executable serves
+    every block copy of every admission (the §4.1.2 discipline at block
+    granularity). The row is zero-padded to a block multiple (a static pad,
+    so still one executable) before slicing: a clamped tail slice would
+    silently shift the last block's tokens when ``max_len`` is not a block
+    multiple."""
+
+    def copy(p: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+        bs = p.shape[1]
+        row = r[0]
+        tail = (-row.shape[0]) % bs
+        if tail:
+            row = jnp.pad(row, [(0, tail)] + [(0, 0)] * (row.ndim - 1))
+        chunk = jax.lax.dynamic_slice_in_dim(row, start, bs, axis=0)
+        return jax.lax.dynamic_update_slice(
+            p, chunk[None].astype(p.dtype), (block,) + (0,) * (p.ndim - 1)
+        )
+
+    return jax.tree.map(copy, pool_layers, row_layers)
+
+
+def free_blocks(pool: Any, mask: jnp.ndarray) -> Any:
+    """Paged-mode eviction: zero the freed slots' ``lengths``. The block
+    table and block free-list are host state (BlockPool), and the physical
+    blocks themselves need no clearing — stale K/V is unreachable until a
+    new owner's validity mask covers the positions it rewrote."""
+    return reset_slots(pool, mask)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def set_slot_length(pool: Any, slot: jnp.ndarray, length: jnp.ndarray) -> Any:
+    """Install a newly admitted slot's token counter (paged admission: the
+    K/V rows arrive via append_block; only ``lengths`` needs the scatter).
+    Donated; ``slot``/``length`` are traced — one executable for all slots."""
+    return {**pool, "lengths": pool["lengths"].at[slot].set(length)}
 
 
 def cache_bytes(cache: Any) -> int:

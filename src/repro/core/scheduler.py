@@ -23,6 +23,16 @@ completion batches), which is the A/B lever ``benchmarks/bench_serve.py``
 measures. Both policies share every compiled program, so the comparison
 isolates scheduling.
 
+``paged=True`` swaps the contiguous SlotPool for the BlockPool (paged KV,
+vLLM-style): admission is additionally gated on free *blocks* (the
+prompt's blocks plus a one-block watermark), each decode step first grows
+every active slot on demand (its next token's block must exist before the
+pool-wide write), and when the pool runs out of blocks the youngest
+request is preempted — evicted, its blocks freed, and requeued at the
+queue's front for full recompute. Greedy decoding and the per-(rid, step)
+fold_in sampling keys make recompute replay token-identical, so paging
+and preemption are pure memory-systems changes, never numerics changes.
+
 Decoder-only families only (no per-request extra inputs; enc-dec serving
 goes through ``engine.generate_beam``).
 """
@@ -38,7 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine, sampling
-from repro.core.slot_pool import SlotPool
+from repro.core.slot_pool import BlockPool, SlotPool
 from repro.models.registry import Model
 
 
@@ -84,11 +94,19 @@ class ServeRequest:
 
 @dataclass
 class SlotState:
-    """Host-side view of one occupied pool slot."""
+    """Host-side view of one occupied pool slot.
+
+    ``kv_len`` mirrors the slot's device-side token counter (prompt tokens
+    at admission, +1 per decode step) — it is the logical position the
+    NEXT decode write lands in, which is what paged growth must cover.
+    ``admit_seq`` orders slots oldest-first for block contention (the
+    preemption victim is always the youngest)."""
 
     req: ServeRequest
     slot: int
     n_generated: int = 0
+    kv_len: int = 0
+    admit_seq: int = 0
 
     def finished(self, token: int, eos_id: Optional[int]) -> bool:
         return (eos_id is not None and token == eos_id) or (
@@ -115,6 +133,9 @@ class Scheduler:
         max_new_cap: int,
         eos_id: Optional[int] = None,
         policy: str = "continuous",
+        paged: bool = False,
+        block_size: int = 16,
+        num_blocks: Optional[int] = None,
         base_key: Optional[jax.Array] = None,
         clock=time.perf_counter,
     ):
@@ -128,10 +149,17 @@ class Scheduler:
         self.max_len = pad_to + max_new_cap + 1
         self.eos_id = eos_id
         self.policy = policy
+        self.paged = paged
         self.base_key = base_key if base_key is not None else jax.random.PRNGKey(0)
         self.clock = clock
 
-        self.pool = SlotPool(model, slots, self.max_len)
+        if paged:
+            self.pool = BlockPool(
+                model, slots, self.max_len,
+                block_size=block_size, num_blocks=num_blocks,
+            )
+        else:
+            self.pool = SlotPool(model, slots, self.max_len)
         self.active: Dict[int, SlotState] = {}
         self.waiting: Deque[ServeRequest] = deque()
         self.finished: List[ServeRequest] = []
@@ -145,7 +173,11 @@ class Scheduler:
         # metrics
         self.n_decode_steps = 0
         self.n_prefills = 0
+        self.n_preemptions = 0
         self.occupancy_trace: List[float] = []
+        self.block_occupancy_trace: List[float] = []
+        self.peak_used_blocks = 0
+        self._seq = 0  # admission order (preemption picks the youngest)
         self._t0 = self.clock()  # run() rebases; timestamps are offsets
 
     def _now(self) -> float:
@@ -168,10 +200,18 @@ class Scheduler:
         slot = self.pool.acquire()
         assert slot is not None
         tokens, length = self._pad_prompt(req.prompt)
+        n_prompt = int(length[0])
         logits, row = engine.prefill(
             self.model, self.params, tokens, length, self.max_len, None
         )
-        self.pool.assign(slot, row)
+        self.pool.assign(slot, row, n_prompt)
+        if self.paged:
+            # claim the first decode step's block NOW (the admission gate
+            # checked a watermark but assign only took the prompt's blocks;
+            # without this a block-aligned prompt could be preempted on its
+            # first step). May fail on an idle just-fits pool — harmless,
+            # _ensure_blocks grows it at step time.
+            self.pool.ensure(slot, n_prompt)
         self.n_prefills += 1
         if req.temperature <= 0.0:  # greedy: skip the top-p pipeline
             first = int(sampling.greedy(logits)[0])
@@ -188,7 +228,11 @@ class Scheduler:
             )
         req.t_admit, req.t_first = now, self._now()
         req.tokens.append(first)
-        state = SlotState(req=req, slot=slot, n_generated=1)
+        state = SlotState(
+            req=req, slot=slot, n_generated=1, kv_len=n_prompt,
+            admit_seq=self._seq,
+        )
+        self._seq += 1
         if state.finished(first, self.eos_id):
             req.t_done = req.t_first
             self.finished.append(req)
@@ -201,19 +245,69 @@ class Scheduler:
         self._temp[slot] = req.temperature
         self._top_p[slot] = req.top_p
 
+    def _admissible(self, req: ServeRequest) -> bool:
+        """Pool-side admission gate. Contiguous: a free slot. Paged: a free
+        slot AND enough free blocks for the prompt plus a one-block
+        watermark (optimistic vLLM-style admission — later growth is served
+        on demand and backed by preemption, not reserved up front)."""
+        if self.pool.n_free == 0:
+            return False
+        if not self.paged:
+            return True
+        n_prompt = max(1, min(len(req.prompt), self.pad_to))
+        need = self.pool.blocks_for(n_prompt)
+        if self.pool.n_active == 0:
+            # idle pool: every block is free and one worst-case request is
+            # guaranteed to fit — gating on the watermark here could wedge
+            return self.pool.n_free_blocks >= need
+        return self.pool.n_free_blocks >= need + 1
+
     def _admit(self, now: float) -> None:
         if self.policy == "fixed" and self.active:
             return  # run-to-completion: no refill until the pool drains
         while (
             self.waiting
             and self.waiting[0].t_arrival <= now
-            and self.pool.n_free > 0
+            and self._admissible(self.waiting[0])
         ):
             self._admit_one(self.waiting.popleft(), now)
+
+    # ---- paged back-pressure ---------------------------------------------
+    def _preempt(self, st: SlotState) -> None:
+        """Out-of-blocks back-pressure: evict the slot, free its blocks,
+        and requeue the request at the FRONT of the waiting queue for full
+        recompute. Greedy decoding / per-(rid, step) sampling keys replay
+        the identical token stream, so preemption costs work, not tokens."""
+        del self.active[st.slot]
+        self.pool.evict(st.slot)
+        self._temp[st.slot] = 0.0
+        st.req.tokens = []
+        self.waiting.appendleft(st.req)
+        self.n_preemptions += 1
+
+    def _ensure_blocks(self) -> None:
+        """Before a paged decode step every active slot must own the block
+        its next token writes into. Slots grow oldest-first; when the pool
+        runs dry the youngest active request is preempted (repeatedly if
+        needed). Terminates: BlockPool guarantees one worst-case request
+        fits, so the oldest slot can always run alone."""
+        for slot, st in sorted(self.active.items(), key=lambda kv: kv[1].admit_seq):
+            if slot not in self.active:
+                continue  # already preempted while growing an older slot
+            while not self.pool.ensure(slot, st.kv_len):
+                victim = max(self.active.values(), key=lambda s: s.admit_seq)
+                self._preempt(victim)
+                if victim is st:
+                    break  # this slot WAS the youngest; it queues
 
     # ---- decode ----------------------------------------------------------
     def step(self) -> List[ServeRequest]:
         """One pool-wide decode step; returns requests finished by it."""
+        if self.paged:
+            self._ensure_blocks()
+            if not self.active:  # everything preempted back to the queue
+                return []
+        self.pool.sync()
         logits, cache = engine.decode_step(
             self.model, self.params, self.pool.cache, jnp.asarray(self._token)
         )
@@ -231,12 +325,18 @@ class Scheduler:
             )
         self.n_decode_steps += 1
         self.occupancy_trace.append(self.pool.occupancy)
+        if self.paged:
+            self.block_occupancy_trace.append(self.pool.block_occupancy)
+            self.peak_used_blocks = max(
+                self.peak_used_blocks, self.pool.n_used_blocks
+            )
         now = self._now()
         done: List[ServeRequest] = []
         for slot, st in list(self.active.items()):
             token = int(toks[slot])
             st.req.tokens.append(token)
             st.n_generated += 1
+            st.kv_len += 1  # this step wrote the slot's K/V at kv_len
             self._token[slot] = token
             self._ngen[slot] = st.n_generated
             if st.finished(token, self.eos_id):
@@ -271,3 +371,9 @@ class Scheduler:
         if not self.occupancy_trace:
             return 0.0
         return float(np.mean(self.occupancy_trace))
+
+    @property
+    def mean_block_occupancy(self) -> float:
+        if not self.block_occupancy_trace:
+            return 0.0
+        return float(np.mean(self.block_occupancy_trace))

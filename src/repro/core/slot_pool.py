@@ -14,18 +14,64 @@ updates are donated jitted programs (kv_cache.write_slot / reset_slots),
 so admission and eviction replay two tiny compiled executables and the
 pool's buffers are updated in place — the engine/scheduler/serve layers
 above never see a reallocation.
+
+``BlockPool`` is the paged variant (Fig 1: KV capacity, not FLOPs, bounds
+the decode batch): the same slot free-list, but K/V storage is a shared
+pool of fixed-size physical *blocks* addressed through per-slot block
+tables, so a slot only ever reserves the blocks its tokens actually
+occupy — see core/kv_cache.py ("Block-table addressing") for the full
+contract. Both pools expose the same acquire/assign/evict/reset surface,
+so the scheduler A/B isolates the allocation policy.
 """
 from __future__ import annotations
 
+import heapq
 from typing import Any, List, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import kv_cache
 from repro.models.registry import Model
 
 
-class SlotPool:
+class _PoolBase:
+    """Slot accounting shared by both pools: a min-heap free-list (acquire
+    is lowest-index-first in O(log slots) — the evict-time full re-sort it
+    replaced was O(slots log slots) per eviction) plus the occupancy /
+    reservation metrics the scheduler A/B reads. Subclasses own ``cache``
+    and the assign/evict storage logic."""
+
+    def __init__(self, slots: int):
+        if slots < 1:
+            raise ValueError("pool needs at least one slot")
+        self.slots = slots
+        self._free: List[int] = list(range(slots))  # min-heap: pop -> lowest
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.slots - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of slots doing real work this step (1 - idle share)."""
+        return self.n_active / self.slots
+
+    @property
+    def reserved_bytes(self) -> int:
+        """Bytes the pool holds allocated regardless of use (Fig 1 metric)."""
+        return kv_cache.cache_bytes(self.cache)
+
+    def acquire(self) -> Optional[int]:
+        """Claim a free slot (lowest index first), or None if full."""
+        return heapq.heappop(self._free) if self._free else None
+
+
+class SlotPool(_PoolBase):
     """Fixed pool of ``slots`` sequence slots backed by one static cache.
 
     Invariants:
@@ -41,46 +87,185 @@ class SlotPool:
     """
 
     def __init__(self, model: Model, slots: int, max_len: int):
-        if slots < 1:
-            raise ValueError("slot pool needs at least one slot")
+        super().__init__(slots)
         self.model = model
-        self.slots = slots
         self.max_len = max_len
         self.cache: Any = model.init_cache(slots, max_len)
-        self._free: List[int] = list(range(slots - 1, -1, -1))  # pop() -> lowest
-
-    # ---- free-list -------------------------------------------------------
-    @property
-    def n_free(self) -> int:
-        return len(self._free)
-
-    @property
-    def n_active(self) -> int:
-        return self.slots - len(self._free)
-
-    @property
-    def occupancy(self) -> float:
-        """Fraction of slots doing real work this step (1 - idle share)."""
-        return self.n_active / self.slots
-
-    def acquire(self) -> Optional[int]:
-        """Claim a free slot (lowest index first), or None if full."""
-        return self._free.pop() if self._free else None
 
     # ---- device-side slot ops (donated, in-place) ------------------------
-    def assign(self, slot: int, row_cache: Any) -> None:
+    def assign(self, slot: int, row_cache: Any, length: Optional[int] = None) -> None:
         """Install a prefilled single-sequence cache (leaves [1, ...]) into
-        ``slot``. The row's ``lengths[0]`` becomes the slot's counter."""
+        ``slot``. The row's ``lengths[0]`` becomes the slot's counter
+        (``length`` is accepted for BlockPool signature parity)."""
         self.cache = kv_cache.write_slot(self.cache, row_cache, jnp.int32(slot))
 
     def evict(self, slot: int) -> None:
         """Finish a slot: zero its length and return it to the free-list."""
         mask = jnp.zeros((self.slots,), bool).at[slot].set(True)
         self.cache = kv_cache.reset_slots(self.cache, mask)
-        self._free.append(slot)
-        self._free.sort(reverse=True)
+        heapq.heappush(self._free, slot)
+
+    def sync(self) -> None:
+        """No host-side tables to flush (BlockPool signature parity)."""
 
     def reset(self) -> None:
         """Evict everything (serve-loop restart)."""
         self.cache = kv_cache.reset_slots(self.cache, jnp.ones((self.slots,), bool))
-        self._free = list(range(self.slots - 1, -1, -1))
+        self._free = list(range(self.slots))
+
+
+class BlockPool(_PoolBase):
+    """Paged KV pool: ``slots`` sequence slots over ``num_blocks`` shared
+    physical blocks of ``block_size`` tokens each.
+
+    Storage is ONE static ``[num_blocks, block_size, ...]`` K/V allocation
+    per layer; a slot's logical positions map to physical blocks through
+    its row of the host block table (shipped to the device by ``sync``).
+    Invariants (locked down by tests/test_paged.py):
+
+    - physical block 0 is the reserved garbage sink: never on the
+      free-list, never in a live slot's table; freed slots' zeroed table
+      rows route their pool-wide decode writes into it;
+    - every block in 1..num_blocks-1 is either on the block free-list or
+      owned by exactly one slot (no double allocation);
+    - ``evict`` returns every owned block to the free-list;
+    - both free-lists are min-heaps: acquire order stays lowest-first;
+    - ``num_blocks - 1 >= max_blocks`` so one worst-case request always
+      fits — the scheduler's preemption ladder terminates because the
+      oldest request can always run alone.
+    """
+
+    def __init__(
+        self,
+        model: Model,
+        slots: int,
+        max_len: int,
+        *,
+        block_size: int = 16,
+        num_blocks: Optional[int] = None,
+    ):
+        super().__init__(slots)
+        if block_size < 1 or block_size > max_len:
+            raise ValueError("need 1 <= block_size <= max_len")
+        cfg = model.config
+        if getattr(cfg, "sliding_window", None):
+            raise NotImplementedError("paged pool unsupported on ring/window caches")
+        if getattr(cfg, "scan_layers", False):
+            raise NotImplementedError("paged pool unsupported with scan_layers")
+        self.model = model
+        self.max_len = max_len
+        self.block_size = block_size
+        self.max_blocks = -(-max_len // block_size)  # ceil: worst case / slot
+        if num_blocks is None:
+            # parity default: every slot can hold a worst-case request
+            num_blocks = slots * self.max_blocks + 1
+        if num_blocks - 1 < self.max_blocks:
+            raise ValueError(
+                f"num_blocks={num_blocks} cannot fit one worst-case request "
+                f"({self.max_blocks} blocks + sink block 0)"
+            )
+        self.num_blocks = num_blocks
+
+        cache = model.init_cache(num_blocks, block_size)
+        cache["lengths"] = jnp.zeros((slots,), jnp.int32)  # per SLOT, not block
+        self.block_tables = np.zeros((slots, self.max_blocks), np.int32)
+        cache["block_tables"] = jnp.asarray(self.block_tables)
+        self.cache: Any = cache
+
+        self._free_blocks: List[int] = list(range(1, num_blocks))  # heap; 0=sink
+        self._owned: List[List[int]] = [[] for _ in range(slots)]
+        self._bt_dirty = False
+
+    # ---- block accounting ------------------------------------------------
+    @property
+    def n_free_blocks(self) -> int:
+        return len(self._free_blocks)
+
+    @property
+    def n_used_blocks(self) -> int:
+        return (self.num_blocks - 1) - len(self._free_blocks)
+
+    @property
+    def block_occupancy(self) -> float:
+        """Fraction of allocatable blocks currently owned by a slot."""
+        return self.n_used_blocks / max(self.num_blocks - 1, 1)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold ``n_tokens`` cached tokens."""
+        return max(1, -(-n_tokens // self.block_size))
+
+    def owned_blocks(self, slot: int) -> List[int]:
+        return list(self._owned[slot])
+
+    # ---- slot lifecycle --------------------------------------------------
+    def assign(self, slot: int, row_cache: Any, length: int) -> None:
+        """Admit a prefilled dense row (leaves [1, S_row, ...]) into
+        ``slot``: allocate blocks for its ``length`` prompt tokens and copy
+        them block by block (one compiled append_block executable)."""
+        need = self.blocks_for(length)
+        if need > self.max_blocks:
+            raise ValueError(f"prompt of {length} tokens exceeds max_len")
+        if need > len(self._free_blocks):
+            raise RuntimeError("out of KV blocks (admission must gate on n_free_blocks)")
+        assert not self._owned[slot], "assign into a slot that still owns blocks"
+        for j in range(need):
+            phys = heapq.heappop(self._free_blocks)
+            self._owned[slot].append(phys)
+            self.block_tables[slot, j] = phys
+            self.cache["layers"] = kv_cache.append_block(
+                self.cache["layers"], row_cache["layers"],
+                jnp.int32(phys), jnp.int32(j * self.block_size),
+            )
+        self._bt_dirty = True
+        self.cache = kv_cache.set_slot_length(
+            self.cache, jnp.int32(slot), jnp.int32(length)
+        )
+
+    def ensure(self, slot: int, kv_len: int) -> bool:
+        """Grow ``slot`` until it owns the block its next write (logical
+        position ``kv_len``) lands in. Host-only: a growth block becomes
+        readable one position at a time as the validity mask advances, so
+        no device copy or clear is needed. Returns False when the pool is
+        out of blocks (caller applies back-pressure / preemption)."""
+        needed = kv_len // self.block_size + 1
+        while len(self._owned[slot]) < needed:
+            if not self._free_blocks:
+                return False
+            phys = heapq.heappop(self._free_blocks)
+            j = len(self._owned[slot])
+            self._owned[slot].append(phys)
+            self.block_tables[slot, j] = phys
+            self._bt_dirty = True
+        return True
+
+    def evict(self, slot: int) -> None:
+        """Finish (or preempt) a slot: all its blocks go back to the block
+        free-list, its table row is zeroed (future garbage writes hit the
+        sink block), and its length counter is zeroed on device."""
+        for phys in self._owned[slot]:
+            heapq.heappush(self._free_blocks, phys)
+        self._owned[slot] = []
+        self.block_tables[slot, :] = 0
+        self._bt_dirty = True
+        heapq.heappush(self._free, slot)
+        mask = jnp.zeros((self.slots,), bool).at[slot].set(True)
+        self.cache = kv_cache.free_blocks(self.cache, mask)
+
+    def sync(self) -> None:
+        """Ship the host block table to the device if it changed since the
+        last decode step (one tiny [slots, max_blocks] int32 transfer)."""
+        if self._bt_dirty:
+            self.cache["block_tables"] = jnp.asarray(self.block_tables)
+            self._bt_dirty = False
+
+    def reset(self) -> None:
+        for slot in range(self.slots):
+            self._owned[slot] = []
+        self.block_tables[:, :] = 0
+        self._free = list(range(self.slots))
+        self._free_blocks = list(range(1, self.num_blocks))
+        self._bt_dirty = True
+        self.cache = kv_cache.free_blocks(
+            self.cache, jnp.ones((self.slots,), bool)
+        )
+        self.sync()

@@ -8,6 +8,10 @@ forever, and the scheduler recycles slots the moment a request finishes
 (per-slot EOS / max-new) — so the decode batch stays as full as the queue
 allows (the Obs #2 idle-time lever). ``--policy fixed`` degrades the same
 machinery to the seed's run-to-completion batcher for A/B comparison.
+``--paged`` swaps the contiguous per-slot reservation for the vLLM-style
+block-pool (core/slot_pool.BlockPool): same token streams, but the cache
+only reserves ``num_blocks * block_size`` tokens instead of
+``slots * (pad_to + max_new_cap)`` — the Fig 1 capacity lever.
 
 Reported per request: TTFT (arrival -> first token), TPOT (mean inter-
 token), e2e latency; aggregate: tokens/s and mean slot-occupancy (the
@@ -152,12 +156,18 @@ def run_scheduler(
     model, params, requests: List[ServeRequest], *,
     slots: int, pad_to: int, max_new_cap: int,
     eos_id: Optional[int] = None, policy: str = "continuous",
-    seed: int = 0,
-) -> Dict[str, float]:
-    """Serve one trace; returns metrics (plus the scheduler's counters)."""
+    paged: bool = False, block_size: int = 16,
+    num_blocks: Optional[int] = None, seed: int = 0,
+    return_requests: bool = False,
+):
+    """Serve one trace; returns metrics (plus the scheduler's counters).
+    Paged mode reports the block-level memory picture: bytes the pool
+    keeps RESERVED vs the bytes its peak block working set actually USED
+    (the reserved-but-unused gap is what paging reclaims, Fig 1)."""
     sched = Scheduler(
         model, params, slots=slots, pad_to=pad_to, max_new_cap=max_new_cap,
-        eos_id=eos_id, policy=policy, base_key=jax.random.PRNGKey(seed),
+        eos_id=eos_id, policy=policy, paged=paged, block_size=block_size,
+        num_blocks=num_blocks, base_key=jax.random.PRNGKey(seed),
     )
     t0 = time.perf_counter()
     done = sched.run(requests)
@@ -168,15 +178,33 @@ def run_scheduler(
         decode_steps=sched.n_decode_steps,
         prefills=sched.n_prefills,
         mean_slot_occupancy=sched.mean_occupancy,
+        kv_reserved_bytes=sched.pool.reserved_bytes,
     )
+    if paged:
+        token_bytes = sched.pool.reserved_bytes / max(
+            sched.pool.num_blocks * sched.pool.block_size, 1
+        )
+        m.update(
+            n_preemptions=sched.n_preemptions,
+            mean_block_occupancy=sched.mean_block_occupancy,
+            kv_used_peak_bytes=int(
+                sched.peak_used_blocks * sched.pool.block_size * token_bytes
+            ),
+        )
+    if return_requests:
+        return m, done
     return m
 
 
-def warmup(model, params, *, slots: int, pad_to: int, max_new_cap: int) -> None:
-    """Compile the three serving executables (single-slot prefill, pool
-    decode step, slot scatter) before any timed run."""
+def warmup(model, params, *, slots: int, pad_to: int, max_new_cap: int,
+           paged: bool = False, block_size: int = 16,
+           num_blocks: Optional[int] = None) -> None:
+    """Compile the serving executables (single-slot prefill, pool decode
+    step, slot scatter — plus block copy/length scatter when paged) before
+    any timed run."""
     sched = Scheduler(
-        model, params, slots=slots, pad_to=pad_to, max_new_cap=max_new_cap
+        model, params, slots=slots, pad_to=pad_to, max_new_cap=max_new_cap,
+        paged=paged, block_size=block_size, num_blocks=num_blocks,
     )
     rng = np.random.default_rng(0)
     sched.run([
@@ -194,6 +222,12 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--policy", choices=["continuous", "fixed"],
                     default="continuous")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV block-pool instead of per-slot rows")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="physical KV blocks incl. the sink block; default "
+                         "= full per-slot parity (no memory saving)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrivals per second; 0 = all at t=0")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -218,18 +252,27 @@ def main(argv=None):
         seed=args.seed, temperature=args.temperature, top_p=args.top_p,
     )
     warmup(model, params, slots=args.batch_slots, pad_to=pad_to,
-           max_new_cap=args.max_new)
+           max_new_cap=args.max_new, paged=args.paged,
+           block_size=args.block_size, num_blocks=args.num_blocks)
     m = run_scheduler(
         model, params, reqs, slots=args.batch_slots, pad_to=pad_to,
         max_new_cap=args.max_new, eos_id=args.eos_id, policy=args.policy,
-        seed=args.seed,
+        paged=args.paged, block_size=args.block_size,
+        num_blocks=args.num_blocks, seed=args.seed,
     )
-    print(f"[serve/{args.policy}] {m['n_requests']} requests in "
+    mode = args.policy + ("/paged" if args.paged else "")
+    print(f"[serve/{mode}] {m['n_requests']} requests in "
           f"{m['wall_s']:.2f}s | {m['tokens_per_s']:.1f} tok/s | "
           f"occupancy={m['mean_slot_occupancy']:.2f} | "
           f"ttft p50={m['ttft_p50_ms']:.0f}ms p99={m['ttft_p99_ms']:.0f}ms | "
           f"tpot p50={m['tpot_p50_ms']:.1f}ms | "
-          f"e2e p50={m['e2e_p50_s']:.2f}s p99={m['e2e_p99_s']:.2f}s")
+          f"e2e p50={m['e2e_p50_s']:.2f}s p99={m['e2e_p99_s']:.2f}s | "
+          f"kv reserved={m['kv_reserved_bytes'] / 1e6:.1f}MB")
+    if args.paged:
+        print(f"[serve/{mode}] block occupancy="
+              f"{m['mean_block_occupancy']:.2f} | "
+              f"preemptions={m['n_preemptions']} | "
+              f"kv used peak={m['kv_used_peak_bytes'] / 1e6:.1f}MB")
     return m
 
 

@@ -83,6 +83,38 @@ def valid_counts(lengths: jnp.ndarray, cache_len: int) -> jnp.ndarray:
     return jnp.minimum(lengths, cache_len)
 
 
+# --------------------------------------------------------------------------
+# paged (block-table) cache helpers
+# --------------------------------------------------------------------------
+# A paged layer cache carries K/V as physical blocks [num_blocks,
+# block_size, ...] plus a per-slot block table ``bt`` [B, max_blocks]
+# mapping logical block t // block_size -> physical block id (see
+# core/kv_cache.py: "Block-table addressing"). Shapes stay static, so the
+# decode step remains ONE compiled executable.
+
+def paged_write_token(buf: jnp.ndarray, new: jnp.ndarray, bt: jnp.ndarray,
+                      lengths: jnp.ndarray) -> jnp.ndarray:
+    """Scatter one token per slot into a block pool: buf [NB, bs, ...],
+    new [B, ...], at physical position (bt[b, lengths[b] // bs],
+    lengths[b] % bs). Live slots own disjoint blocks, so their targets
+    never collide; freed slots' tables are all-zero, so their (garbage)
+    writes land in the reserved sink block 0."""
+    bs = buf.shape[1]
+    blk = jnp.clip(lengths // bs, 0, bt.shape[1] - 1)
+    phys = jnp.take_along_axis(bt, blk[:, None], axis=1)[:, 0]  # [B]
+    return buf.at[phys, lengths % bs].set(new.astype(buf.dtype))
+
+
+def paged_gather(buf: jnp.ndarray, bt: jnp.ndarray) -> jnp.ndarray:
+    """Materialize each slot's logical K/V view: buf [NB, bs, ...] gathered
+    through bt [B, MB] -> [B, MB * bs, ...]. The gather is a transient
+    activation (same read set the contiguous decode touches); the memory
+    the pool *reserves* is only ``NB * bs`` tokens."""
+    b, mb = bt.shape
+    g = buf[bt]  # [B, MB, bs, ...]
+    return g.reshape((b, mb * buf.shape[1]) + buf.shape[2:])
+
+
 def _sp_decode(cache, k_new, v_new, q, lengths):
     """Sequence-parallel flash decode under shard_map.
 
@@ -209,6 +241,25 @@ def attention(
             q, k, v, q_positions=positions, k_positions=positions,
             causal=not bidirectional, window=window, impl=impl,
         )
+    elif mode == "decode" and "bt" in cache:
+        if window is not None:
+            raise NotImplementedError("paged cache unsupported on ring/window")
+        if SP_MESH is not None:
+            raise NotImplementedError(
+                "paged decode unsupported under sequence-parallel shard_map"
+            )
+        bt = cache["bt"]  # [B, max_blocks] int32
+        bs = cache["k"].shape[1]
+        new_cache = {
+            "k": paged_write_token(cache["k"], k[:, 0], bt, lengths),
+            "v": paged_write_token(cache["v"], v[:, 0], bt, lengths),
+            "bt": bt,
+        }
+        n_valid = valid_counts(lengths + 1, bt.shape[1] * bs)
+        out = ops.decode_attention(
+            q[:, 0], paged_gather(new_cache["k"], bt),
+            paged_gather(new_cache["v"], bt), n_valid, impl=impl,
+        )[:, None]
     elif mode == "decode":
         if SP_MESH is not None and window is None:
             out, new_cache = _sp_decode(cache, k[:, 0], v[:, 0], q[:, 0], lengths)
@@ -225,6 +276,8 @@ def attention(
                 q[:, 0], new_cache["k"], new_cache["v"], n_valid, impl=impl
             )[:, None]
     elif mode == "extend":
+        if "bt" in cache:
+            raise NotImplementedError("extend unsupported on paged caches")
         s = cache["k"].shape[1]
         if window is not None:
             # extend over a ring buffer would need wraparound scatter;
@@ -352,17 +405,33 @@ def mla_attention(
                 ),
             }
     elif mode in ("decode", "extend"):
-        s = cache["latent"].shape[1]
+        paged = "bt" in cache
+        if paged and mode == "extend":
+            raise NotImplementedError("extend unsupported on paged caches")
         latent_new = jnp.concatenate([c_kv, k_rope], axis=-1)  # tiny: [B,T,r+rope]
-        if mode == "decode":
+        if paged:
+            bt = cache["bt"]
+            new_cache = {
+                "latent": paged_write_token(
+                    cache["latent"], latent_new[:, 0], bt, lengths
+                ),
+                "bt": bt,
+            }
+            lat = paged_gather(new_cache["latent"], bt)
+            s = lat.shape[1]
+        elif mode == "decode":
+            s = cache["latent"].shape[1]
             idx = lengths % s
             new_cache = {
                 "latent": write_decode(cache["latent"], latent_new[:, 0], idx),
             }
+            lat = new_cache["latent"]
         else:
+            s = cache["latent"].shape[1]
             new_cache = {
                 "latent": write_extend(cache["latent"], latent_new, lengths),
             }
+            lat = new_cache["latent"]
         # Absorbed attention (DeepSeek-V2 §2.1): fold kv_up's K-half into
         # the query so attention runs directly against the latent cache —
         # scores = [q_nope W_uk ; q_rope] . [c_kv ; k_rope]. The latent
@@ -372,8 +441,8 @@ def mla_attention(
         w_uv = w_up[:, :, m.qk_nope_dim:]  # [r, H, v]
         q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, w_uk)  # [B,T,H,r]
         q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)  # [B,T,H,r+rope]
-        k_eff = new_cache["latent"]  # K = whole latent buffer (no copy)
-        v_eff = new_cache["latent"][:, :, : m.kv_lora_rank]  # V = slice
+        k_eff = lat  # K = whole latent buffer (no copy; paged: gathered view)
+        v_eff = lat[:, :, : m.kv_lora_rank]  # V = slice
         if mode == "decode":
             n_valid = valid_counts(lengths + 1, s)
             ctx_lat = ops.decode_attention(

@@ -151,6 +151,9 @@ def forward(
     x = L.embed(params["embed"], tokens)
     aux_total = jnp.float32(0.0)
     new_layers = []
+    # paged serving: every layer shares ONE block table (stored once at the
+    # cache's top level; injected as a per-layer view, stripped on return)
+    bt = cache.get("block_tables") if cache is not None else None
     base_layer_fn = layer_forward
     if cfg.seq_parallel and SEQ_PARALLEL_SPEC is not None:
         sp_spec = SEQ_PARALLEL_SPEC
@@ -165,10 +168,14 @@ def forward(
         layer_fn = functools.partial(_layer_forward_remat, base_layer_fn)
     for i, lp in enumerate(params["layers"]):
         lc = cache["layers"][i] if cache is not None else None
+        if bt is not None and lc is not None:
+            lc = dict(lc, bt=bt)
         x, nlc, aux = layer_fn(
             cfg, lp, x, layer=i, positions=positions, lengths=lengths,
             cache=lc, mode=mode, impl=impl,
         )
+        if bt is not None and nlc is not None:
+            nlc = {k: v for k, v in nlc.items() if k != "bt"}
         new_layers.append(nlc)
         aux_total = aux_total + aux
 
@@ -205,6 +212,8 @@ def forward(
         else:  # decode / extend
             new_len = cache["lengths"] + t
         new_cache = {"lengths": new_len, "layers": new_layers}
+        if bt is not None:
+            new_cache["block_tables"] = bt
         if cfg.scan_layers:
             new_cache["scanned"] = new_scanned
     return logits, new_cache, {"aux_loss": aux_total}

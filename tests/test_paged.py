@@ -1,0 +1,339 @@
+"""Paged KV block-pool invariant suite (ISSUE 3 test archetype).
+
+Locks down the BlockPool contract from core/slot_pool.py / core/kv_cache.py
+("Block-table addressing"):
+
+- random assign/grow(decode)/evict sequences never double-allocate a
+  physical block, never hand out the reserved sink block 0, and return
+  every freed block to the free-list (conservation);
+- both free-lists are min-heaps: acquire order stays lowest-first (the
+  O(slots log slots) evict re-sort this replaced);
+- reads through the block table equal reads from a dense reference cache,
+  including after block recycling across slots, and pool-wide garbage
+  writes from freed slots land only in the sink block;
+- the scheduler applies back-pressure (queue + preempt, never corrupt)
+  when the pool runs out of blocks mid-decode.
+
+Property tests run under hypothesis when installed (tests/_hyp.py shim)
+and as fixed-seed unit sequences otherwise.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hyp import given, hst, settings
+from repro.configs import SMOKE_CONFIGS
+from repro.core import engine, kv_cache, sampling
+from repro.core.scheduler import Scheduler, ServeRequest
+from repro.core.slot_pool import BlockPool, SlotPool
+from repro.models import attention as A
+from repro.models import get_model
+
+KEY = jax.random.PRNGKey(0)
+
+SLOTS, MAX_LEN, BS, NB = 3, 12, 4, 8  # max_blocks=3, usable blocks=7
+
+
+class _FakeConfig:
+    sliding_window = None
+    scan_layers = False
+
+
+class _FakeModel:
+    """Minimal Model stand-in: one GQA-shaped cache layer, tiny leaves —
+    exercises the real BlockPool/device ops without a transformer."""
+
+    config = _FakeConfig()
+
+    def init_cache(self, batch, max_len):
+        shape = (batch, max_len, 1, 2)
+        return {
+            "lengths": jnp.zeros((batch,), jnp.int32),
+            "layers": [{"k": jnp.zeros(shape, jnp.float32),
+                        "v": jnp.zeros(shape, jnp.float32)}],
+        }
+
+
+def _mk_row(rng, length):
+    """A fake prefilled dense row [1, MAX_LEN, 1, 2] with known contents."""
+    k = rng.normal(size=(1, MAX_LEN, 1, 2)).astype(np.float32)
+    v = rng.normal(size=(1, MAX_LEN, 1, 2)).astype(np.float32)
+    row = {"lengths": jnp.asarray([length], jnp.int32),
+           "layers": [{"k": jnp.asarray(k), "v": jnp.asarray(v)}]}
+    return row, k
+
+
+class _Mirror:
+    """Host-side model of what the pool MUST contain: a dense per-slot
+    reference cache plus the allocation bookkeeping the invariants check."""
+
+    def __init__(self, pool: BlockPool):
+        self.pool = pool
+        s_log = pool.max_blocks * pool.block_size
+        self.dense = np.zeros((SLOTS, s_log, 1, 2), np.float32)
+        self.kv_len = {}  # active slot -> tokens written
+        self.dev_lengths = np.zeros((SLOTS,), np.int32)
+
+    # ---- ops -------------------------------------------------------------
+    def admit(self, rng) -> bool:
+        pool = self.pool
+        length = int(rng.integers(1, MAX_LEN - 2))
+        if pool.n_free == 0 or pool.n_free_blocks < pool.blocks_for(length):
+            return False
+        free_before = sorted(pool._free)
+        slot = pool.acquire()
+        assert slot == free_before[0], "acquire must stay lowest-first"
+        row, k = _mk_row(rng, length)
+        pool.assign(slot, row, length)
+        self.dense[slot] = 0.0
+        self.dense[slot, :length] = k[0, :length]
+        self.kv_len[slot] = length
+        self.dev_lengths[slot] = length
+        return True
+
+    def decode_step(self, rng) -> None:
+        """Pool-wide token write, exactly as the serving decode step does:
+        every slot writes at its device length — freed slots' garbage must
+        land in the sink block, never in a live neighbour."""
+        pool = self.pool
+        for slot, n in self.kv_len.items():  # growth (scheduler _ensure_blocks)
+            assert pool.ensure(slot, n), "mirror only steps when blocks exist"
+        pool.sync()
+        new = rng.normal(size=(SLOTS, 1, 2)).astype(np.float32)
+        bt = pool.cache["block_tables"]
+        lengths = jnp.asarray(self.dev_lengths)
+        layer = pool.cache["layers"][0]
+        pool.cache["layers"][0] = {
+            "k": A.paged_write_token(layer["k"], jnp.asarray(new), bt, lengths),
+            "v": layer["v"],
+        }
+        for slot, n in list(self.kv_len.items()):
+            self.dense[slot, n] = new[slot]
+            self.kv_len[slot] = n + 1
+        self.dev_lengths += 1  # the decode step increments EVERY row
+
+    def evict(self, rng) -> bool:
+        if not self.kv_len:
+            return False
+        slot = int(rng.choice(sorted(self.kv_len)))
+        self.pool.evict(slot)
+        del self.kv_len[slot]
+        self.dev_lengths[slot] = 0
+        return True
+
+    # ---- invariants ------------------------------------------------------
+    def check(self) -> None:
+        pool = self.pool
+        owned = [b for s in range(SLOTS) for b in pool.owned_blocks(s)]
+        assert len(owned) == len(set(owned)), "double-allocated block"
+        assert 0 not in owned, "sink block 0 handed out"
+        assert sorted(owned + list(pool._free_blocks)) == list(
+            range(1, pool.num_blocks)
+        ), "block leaked or duplicated (free-list conservation)"
+        for s in range(SLOTS):
+            if s not in self.kv_len:
+                assert not pool.owned_blocks(s)
+                assert (pool.block_tables[s] == 0).all()
+        # reads through the block table == dense reference reads
+        pool.sync()
+        gathered = np.asarray(
+            A.paged_gather(pool.cache["layers"][0]["k"],
+                           pool.cache["block_tables"])
+        )
+        for s, n in self.kv_len.items():
+            np.testing.assert_array_equal(gathered[s, :n], self.dense[s, :n])
+
+
+def _run_ops(ops, seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    pool = BlockPool(_FakeModel(), SLOTS, MAX_LEN, block_size=BS, num_blocks=NB)
+    mirror = _Mirror(pool)
+    for op in ops:
+        if op == 0:
+            mirror.admit(rng)
+        elif op == 1 and mirror.kv_len:
+            # step only when the pool can cover every slot's growth and no
+            # slot would write past max_len (the scheduler guarantees both)
+            need = sum(
+                max(0, n // BS + 1 - len(pool.owned_blocks(s)))
+                for s, n in mirror.kv_len.items()
+            )
+            if (need <= pool.n_free_blocks
+                    and all(n < MAX_LEN for n in mirror.kv_len.values())):
+                mirror.decode_step(rng)
+            else:
+                mirror.evict(rng)
+        else:
+            mirror.evict(rng)
+        mirror.check()
+    # drain: every block must come home
+    for slot in list(mirror.kv_len):
+        pool.evict(slot)
+    assert sorted(pool._free_blocks) == list(range(1, NB))
+    assert sorted(pool._free) == list(range(SLOTS))
+
+
+def test_block_pool_fixed_sequences():
+    """Hypothesis-free coverage of the same invariant machinery."""
+    _run_ops([0, 0, 1, 1, 2, 0, 1, 2, 2, 0, 0, 0, 1, 1, 1, 2, 1, 2], seed=0)
+    _run_ops([0, 1, 1, 1, 1, 1, 1, 1, 1, 0, 2, 0, 1, 2], seed=1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(hst.lists(hst.integers(min_value=0, max_value=2), max_size=40),
+       hst.integers(min_value=0, max_value=2**31 - 1))
+def test_block_pool_property(ops, seed):
+    """Random assign/step/evict interleavings preserve every invariant."""
+    _run_ops(ops, seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(hst.permutations(list(range(6))))
+def test_slot_pool_heap_acquire_stays_lowest_first(order):
+    """Satellite: the heap free-list (replacing the per-evict re-sort)
+    must still recycle lowest-index-first under ANY eviction order."""
+    pool = SlotPool(_FakeModel(), slots=6, max_len=4)
+    got = [pool.acquire() for _ in range(6)]
+    assert got == list(range(6))
+    for slot in order:
+        pool.evict(slot)
+    assert [pool.acquire() for _ in range(6)] == list(range(6))
+
+
+def test_block_pool_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        BlockPool(_FakeModel(), SLOTS, MAX_LEN, block_size=BS, num_blocks=3)
+    with pytest.raises(ValueError):
+        BlockPool(_FakeModel(), SLOTS, MAX_LEN, block_size=MAX_LEN + 1)
+
+    class _Ring(_FakeConfig):
+        sliding_window = 8
+
+    class _RingModel(_FakeModel):
+        config = _Ring()
+
+    with pytest.raises(NotImplementedError):
+        BlockPool(_RingModel(), SLOTS, MAX_LEN, block_size=BS)
+
+
+def test_append_block_tail_not_clamped_when_max_len_unaligned():
+    """Regression: when max_len is not a block multiple, the last block's
+    source slice must be zero-padded, not clamped — a clamped slice shifts
+    the tail prompt tokens' K/V to wrong logical positions."""
+    max_len, bs = 10, 4  # last block covers positions 8..11 > max_len
+    pool = BlockPool(_FakeModel(), 2, max_len, block_size=bs, num_blocks=7)
+    rng = np.random.default_rng(3)
+    k = rng.normal(size=(1, max_len, 1, 2)).astype(np.float32)
+    row = {"lengths": jnp.asarray([max_len], jnp.int32),
+           "layers": [{"k": jnp.asarray(k), "v": jnp.asarray(k)}]}
+    slot = pool.acquire()
+    pool.assign(slot, row, max_len)
+    pool.sync()
+    gathered = np.asarray(
+        A.paged_gather(pool.cache["layers"][0]["k"],
+                       pool.cache["block_tables"])
+    )
+    np.testing.assert_array_equal(gathered[slot, :max_len], k[0])
+
+
+def test_scheduler_paged_unaligned_max_len_matches_generate(llama):
+    """End-to-end tail-alignment regression: block_size > max_new_cap + 1
+    makes the last prompt block extend past max_len; tokens must still
+    match per-request generate exactly."""
+    model, params = llama
+    pad_to, max_new = 9, 4  # max_len=14, bs=8 -> blocks cover 16 > 14
+    rng = np.random.default_rng(5)
+    reqs = [
+        ServeRequest(rid=i,
+                     prompt=rng.integers(0, model.config.vocab_size, size=9),
+                     max_new=max_new)
+        for i in range(3)
+    ]
+    sched = Scheduler(model, params, slots=2, pad_to=pad_to,
+                      max_new_cap=max_new, paged=True, block_size=8,
+                      num_blocks=9)
+    done = sched.run([dataclasses.replace(r, tokens=[]) for r in reqs])
+    for r in reqs:
+        got = next(d for d in done if d.rid == r.rid)
+        buf = np.zeros((1, pad_to), np.int32)
+        buf[0, : len(r.prompt)] = r.prompt
+        want = np.asarray(
+            engine.generate(
+                model, params, jnp.asarray(buf),
+                prompt_lengths=jnp.asarray([len(r.prompt)]),
+                max_new_tokens=r.max_new, sampler=sampling.greedy,
+            )["tokens"]
+        )[0]
+        np.testing.assert_array_equal(np.array(got.tokens), want)
+
+
+def test_block_pool_parity_default_fits_worst_case():
+    pool = BlockPool(_FakeModel(), SLOTS, MAX_LEN, block_size=BS)
+    assert pool.num_blocks == SLOTS * pool.max_blocks + 1
+    rng = np.random.default_rng(0)
+    mirror = _Mirror(pool)
+    assert mirror.admit(rng) and mirror.admit(rng) and mirror.admit(rng)
+    for _ in range(4):
+        mirror.decode_step(rng)
+        mirror.check()
+
+
+# ------------------------------------------------- scheduler back-pressure
+@pytest.fixture(scope="module")
+def llama():
+    cfg = SMOKE_CONFIGS["llama3.2-1b"].replace(dtype="float32")
+    model = get_model(cfg)
+    return model, model.init(KEY)
+
+
+def test_scheduler_block_exhaustion_queues_and_recovers(llama):
+    """Satellite: a trace sized to exhaust the block pool mid-decode must
+    queue/preempt — never crash or corrupt a neighbour — and every request
+    still finishes with its metrics recorded and its exact greedy tokens."""
+    model, params = llama
+    pad_to, max_new = 8, 16
+    rng = np.random.default_rng(2)
+    reqs = [
+        ServeRequest(rid=i,
+                     prompt=rng.integers(0, model.config.vocab_size, size=8),
+                     max_new=max_new)
+        for i in range(4)
+    ]
+    # max_len=25, bs=4 -> 7 blocks/request worst case; 7 usable blocks total
+    # cannot hold two full requests => guaranteed mid-decode exhaustion
+    sched = Scheduler(
+        model, params, slots=2, pad_to=pad_to, max_new_cap=max_new,
+        paged=True, block_size=4, num_blocks=8,
+    )
+    done = sched.run([dataclasses.replace(r, tokens=[]) for r in reqs])
+    assert len(done) == len(reqs)
+    assert sched.n_preemptions >= 1  # back-pressure actually engaged
+    for r in reqs:
+        got = next(d for d in done if d.rid == r.rid)
+        buf = np.zeros((1, pad_to), np.int32)
+        buf[0, : len(r.prompt)] = r.prompt
+        want = np.asarray(
+            engine.generate(
+                model, params, jnp.asarray(buf),
+                prompt_lengths=jnp.asarray([len(r.prompt)]),
+                max_new_tokens=r.max_new, sampler=sampling.greedy,
+            )["tokens"]
+        )[0]
+        np.testing.assert_array_equal(np.array(got.tokens), want,
+                                      err_msg=f"request {r.rid} corrupted")
+        assert got.t_first is not None and got.t_done is not None
+        assert got.ttft >= 0 and got.tpot >= 0 and got.e2e >= got.ttft
+
+
+def test_paged_reserved_bytes_below_contiguous(llama):
+    """The capacity lever itself: at equal slots/max_len the BlockPool's
+    reservation is a fraction of the contiguous pool's (Fig 1)."""
+    model, _ = llama
+    contiguous = SlotPool(model, slots=4, max_len=81)
+    paged = BlockPool(model, slots=4, max_len=81, block_size=16, num_blocks=14)
+    ratio = paged.reserved_bytes / contiguous.reserved_bytes
+    assert ratio <= 0.70, f"paged reservation only {ratio:.2f}x of contiguous"
+    assert kv_cache.cache_token_bytes(paged.cache) > 0

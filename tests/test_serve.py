@@ -147,6 +147,51 @@ def test_scheduler_eos_eviction_matches_generate(llama):
             assert got.tokens[-1] == eos_id  # stopped AT the eos token
 
 
+def test_paged_pool_matches_contiguous_on_poisson_trace(llama):
+    """ISSUE 3 acceptance: the same Poisson trace through the scheduler
+    yields identical token streams with the contiguous SlotPool and the
+    paged BlockPool — paging changes memory layout, never tokens."""
+    model, params = llama
+    cfg = model.config
+
+    def trace():
+        return serve.poisson_trace(
+            serve.data_mod.PAPER_PROFILES["seamless_s2t"], 8,
+            pad_to=PAD_TO, max_new_cap=12, vocab_size=cfg.vocab_size,
+            arrival_rate=500.0, seed=11,
+        )
+
+    outs = {}
+    for paged in (False, True):
+        sched = Scheduler(
+            model, params, slots=2, pad_to=PAD_TO, max_new_cap=12,
+            paged=paged, block_size=4, num_blocks=12,
+        )
+        done = sched.run(trace())
+        assert len(done) == 8
+        outs[paged] = {d.rid: list(d.tokens) for d in done}
+    assert outs[True] == outs[False]
+
+
+def test_paged_pool_matches_generate_with_eos(llama):
+    """Paged serving honors per-slot EOS eviction + block recycling and
+    still matches per-request generate's EOS-padded contract."""
+    model, params = llama
+    rng = np.random.default_rng(2)
+    reqs = _requests(model.config, 5, rng, [10, 8])
+    probe = _reference(model, params, reqs[0])
+    eos_id = int(probe[2])
+    sched = Scheduler(
+        model, params, slots=2, pad_to=PAD_TO, max_new_cap=10, eos_id=eos_id,
+        paged=True, block_size=4, num_blocks=12,
+    )
+    done = sched.run([dataclasses.replace(r, tokens=[]) for r in reqs])
+    for r in reqs:
+        got = next(d for d in done if d.rid == r.rid)
+        want = _reference(model, params, r, eos_id=eos_id)
+        np.testing.assert_array_equal(got.padded_output(eos_id), want)
+
+
 def test_scheduler_timestamps_and_occupancy(llama):
     model, params = llama
     rng = np.random.default_rng(3)
