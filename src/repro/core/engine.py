@@ -15,6 +15,11 @@ scheduler in core/scheduler.py):
                     scheduler's single-slot refill prefill.
 - ``decode_step`` — one jitted decode-step program (cache donated), the
                     executable replayed forever.
+- ``mixed_step``  — one jitted token-budget mixed prefill/decode program
+                    (paged caches): every slot advances by its own
+                    ``t_new`` tokens in the same step — decode slots by 1,
+                    a prefilling slot by a prompt chunk — so admission
+                    work interleaves with decoding (chunked prefill).
 
 Engines (thin wrappers over the primitives):
 - ``generate``            — batch top-p/greedy generation (Llama profile).
@@ -70,6 +75,32 @@ def decode_step(model: Model, params, cache, token):
     logits, cache, _ = model.forward(
         params, {"tokens": token[:, None]}, cache=cache, mode="decode"
     )
+    return logits[:, 0], cache
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def mixed_step(model: Model, params, cache, tokens, t_new, lengths):
+    """One token-budget mixed prefill/decode step over the whole pool
+    (chunked prefill, paged caches only): tokens [B, C] carries each slot's
+    lane payload — lane 0 holds a decoding slot's last token (t_new = 1), a
+    prefilling slot's next prompt chunk fills lanes 0..t_new-1 (t_new up to
+    C), and idle rows ride along with t_new = 0. ``lengths`` [B] is the
+    AUTHORITATIVE per-slot write position from the scheduler's host state
+    (a decoding slot's kv length, a prefilling slot's chunk cursor): the
+    device counters are pinned to it inside this same executable, so the
+    pool-wide decode step's every-row increment (which drifts free and
+    mid-prefill rows) can never misplace a chunk — and no separate resync
+    dispatch ever runs between steps. Returns the logits at each slot's
+    LAST valid lane [B, V] (a decode slot's next-token logits; a slot
+    finishing its prefill reads its first-token logits here) plus the
+    donated cache. ONE compiled executable per (B, C) signature —
+    admission rides the pool-wide step instead of stalling it."""
+    cache = {**cache, "lengths": lengths}
+    logits, cache, _ = model.forward(
+        params, {"tokens": tokens, "t_new": t_new}, cache=cache, mode="mixed"
+    )
+    # mixed-mode forward already gathered each slot's last valid lane
+    # before the unembed (the vocab projection runs on one lane per slot)
     return logits[:, 0], cache
 
 

@@ -48,6 +48,36 @@ row into a physical block (donated; block id and source offset are traced
 so one executable serves every copy); ``free_blocks`` zeroes freed slots'
 length counters (the block table itself is host state); ``set_slot_length``
 installs a newly admitted slot's counter.
+
+Chunked prefill over block tables
+---------------------------------
+The unchunked paged admission path still materializes a dense
+``pad_to``-row per prompt (``engine.prefill``) and then copies it into
+blocks via ``append_block`` — a whole prefill program run BETWEEN decode
+steps, stalling every resident request. Chunked prefill
+(core/prefill.py + ``engine.mixed_step``) removes both the stall and the
+dense row:
+
+- admission enqueues a *chunk cursor*; each pool-wide mixed step carries
+  up to ``prefill_budget`` prompt tokens alongside every live decode
+  token — ONE compiled executable, so admission rides the step instead
+  of freezing it;
+- the chunk's K/V goes from the layer's projections straight into the
+  slot's physical blocks (``models/attention.paged_write_chunk``): per
+  lane ``j`` the logical position is ``lengths[slot] + j``, mapping
+  through the same block table as decode writes — no ``pad_to`` row, no
+  ``append_block`` copy, no shape change;
+- lanes past a slot's ``t_new`` (a final partial chunk's padding, idle
+  rows) are routed to the reserved sink block 0, exactly like freed
+  slots' garbage decode writes;
+- the mixed step PINS every row's ``lengths`` counter from the
+  scheduler's host state (decode kv length / chunk cursor / 0 for free
+  rows) inside its own executable before writing, then advances it by
+  ``t_new``: the plain decode step's every-row increment — which drifts
+  free and mid-prefill rows' counters — can never misplace a chunk. A
+  half-prefilled slot is indistinguishable from a short finished prompt
+  to every validity mask; preempting it just frees its blocks and drops
+  the cursor — replay restarts at chunk zero, token-identically.
 """
 from __future__ import annotations
 

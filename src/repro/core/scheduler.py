@@ -33,6 +33,24 @@ queue's front for full recompute. Greedy decoding and the per-(rid, step)
 fold_in sampling keys make recompute replay token-identical, so paging
 and preemption are pure memory-systems changes, never numerics changes.
 
+``chunked=True`` (requires ``paged=True``) removes the remaining admission
+stall: instead of running a whole ``pad_to``-token prefill program between
+decode steps, admission just enqueues a chunk cursor (core/prefill.py) and
+every step becomes ``engine.mixed_step`` — decode tokens for all live
+slots PLUS up to ``prefill_budget`` prompt-chunk tokens written straight
+into the admitted slot's KV blocks. Resident requests never wait on a
+full prefill (the decode-stall-per-admission metric in launch/serve.py);
+the admitted request trades a slightly longer TTFT for it. Steps with no
+pending chunks fall back to the plain ``decode_step`` executable. A
+half-prefilled request can be preempted like any other resident: its
+blocks are freed, its cursor dropped, and re-admission replays the prompt
+from chunk zero — token-identical under greedy / per-(rid, step) keys.
+
+Admission and preemption honor ``ServeRequest.priority`` (default 0,
+higher = more urgent): the admission loop picks the highest-priority
+arrived request (stable FIFO within a class), and the preemption victim
+is always the youngest request of the LOWEST resident priority.
+
 Decoder-only families only (no per-request extra inputs; enc-dec serving
 goes through ``engine.generate_beam``).
 """
@@ -48,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine, sampling
+from repro.core.prefill import ChunkCursor, ChunkedPrefill
 from repro.core.slot_pool import BlockPool, SlotPool
 from repro.models.registry import Model
 
@@ -64,11 +83,15 @@ class ServeRequest:
     t_arrival: float = 0.0
     temperature: float = 0.0  # 0 => greedy
     top_p: float = 1.0
+    priority: int = 0  # higher = more urgent (admission + preemption)
     # ---- filled in by the scheduler ----
     tokens: List[int] = field(default_factory=list)
     t_admit: Optional[float] = None
     t_first: Optional[float] = None  # first token (TTFT reference)
     t_done: Optional[float] = None
+    # per-token commit timestamps (t_first repeated as element 0) — the
+    # inter-token gaps feed the decode-stall-per-admission metric
+    t_tokens: List[float] = field(default_factory=list)
 
     @property
     def ttft(self) -> float:
@@ -136,11 +159,17 @@ class Scheduler:
         paged: bool = False,
         block_size: int = 16,
         num_blocks: Optional[int] = None,
+        chunked: bool = False,
+        prefill_budget: Optional[int] = None,
         base_key: Optional[jax.Array] = None,
         clock=time.perf_counter,
     ):
         if policy not in ("continuous", "fixed"):
             raise ValueError(f"unknown policy {policy!r}")
+        if chunked and not paged:
+            raise ValueError("chunked prefill requires the paged block-pool")
+        if chunked and policy != "continuous":
+            raise ValueError("chunked prefill requires policy='continuous'")
         self.model = model
         self.params = params
         self.slots = slots
@@ -160,6 +189,11 @@ class Scheduler:
             )
         else:
             self.pool = SlotPool(model, slots, self.max_len)
+        self.chunked = chunked
+        self.chunk_mgr: Optional[ChunkedPrefill] = None
+        if chunked:
+            budget = prefill_budget if prefill_budget is not None else block_size
+            self.chunk_mgr = ChunkedPrefill(slots, budget)
         self.active: Dict[int, SlotState] = {}
         self.waiting: Deque[ServeRequest] = deque()
         self.finished: List[ServeRequest] = []
@@ -174,6 +208,18 @@ class Scheduler:
         self.n_decode_steps = 0
         self.n_prefills = 0
         self.n_preemptions = 0
+        self.n_mixed_steps = 0  # steps that carried at least one chunk
+        self.n_chunks = 0
+        self.n_chunk_tokens = 0
+        # decode-stall-per-admission, measured DIRECTLY: when a request is
+        # admitted while residents are decoding, the stall is the interval
+        # from the previous step's commit to the next step's commit — the
+        # inter-token gap the admission work sat inside. Immune to
+        # preemption resetting per-request timestamp lists, and recompute
+        # prefills after preemption count as the re-admissions they are.
+        self.admission_stalls: List[float] = []
+        self._last_commit_t: Optional[float] = None
+        self._stall_marks: List[float] = []
         self.occupancy_trace: List[float] = []
         self.block_occupancy_trace: List[float] = []
         self.peak_used_blocks = 0
@@ -185,18 +231,33 @@ class Scheduler:
 
     # ---- request intake --------------------------------------------------
     def submit(self, requests: List[ServeRequest]) -> None:
-        for r in sorted(requests, key=lambda r: r.t_arrival):
+        # arrival order first; within an arrival instant, higher priority
+        # first (stable — submission order breaks remaining ties)
+        for r in sorted(requests, key=lambda r: (r.t_arrival, -r.priority)):
             r.max_new = min(r.max_new, self.max_new_cap)
             self.waiting.append(r)
 
     # ---- admission -------------------------------------------------------
+    def _trim_prompt(self, prompt: np.ndarray) -> np.ndarray:
+        """The ONE trim/truncation policy shared by both admission paths
+        (dense prefill and chunk cursors)."""
+        return np.asarray(prompt, np.int32)[: self.pad_to]
+
     def _pad_prompt(self, prompt: np.ndarray):
-        p = np.asarray(prompt, np.int32)[: self.pad_to]
+        p = self._trim_prompt(prompt)
         buf = np.zeros((1, self.pad_to), np.int32)
         buf[0, : len(p)] = p
         return jnp.asarray(buf), jnp.asarray([len(p)], jnp.int32)
 
+    def _mark_admission_stall(self) -> None:
+        """Residents are mid-decode: whatever admission work happens now
+        widens their current inter-token gap. Remember the gap's start (the
+        last step's commit time); the next step's commit closes it."""
+        if self.active and self._last_commit_t is not None:
+            self._stall_marks.append(self._last_commit_t)
+
     def _admit_one(self, req: ServeRequest, now: float) -> None:
+        self._mark_admission_stall()
         slot = self.pool.acquire()
         assert slot is not None
         tokens, length = self._pad_prompt(req.prompt)
@@ -228,6 +289,7 @@ class Scheduler:
             )
         req.t_admit, req.t_first = now, self._now()
         req.tokens.append(first)
+        req.t_tokens.append(req.t_first)
         state = SlotState(
             req=req, slot=slot, n_generated=1, kv_len=n_prompt,
             admit_seq=self._seq,
@@ -245,84 +307,134 @@ class Scheduler:
         self._temp[slot] = req.temperature
         self._top_p[slot] = req.top_p
 
+    def _admit_one_chunked(self, req: ServeRequest, now: float) -> None:
+        """Chunked admission: no prefill program, no dense row — acquire a
+        slot, enqueue a chunk cursor, and let the mixed steps stream the
+        prompt into the slot's blocks ``prefill_budget`` tokens at a time."""
+        self._mark_admission_stall()
+        slot = self.pool.acquire()
+        assert slot is not None
+        cursor = ChunkCursor(req=req, slot=slot,
+                             prompt=self._trim_prompt(req.prompt),
+                             admit_seq=self._seq)
+        self._seq += 1
+        self.chunk_mgr.add(cursor)
+        req.t_admit = now
+        # pre-stage the slot's sampling state so the step that completes
+        # the prefill samples the first token with the (rid, 0) key in the
+        # same vectorized call as everyone else's decode tokens
+        self._rid[slot] = req.rid
+        self._ngen[slot] = 0
+        self._temp[slot] = req.temperature
+        self._top_p[slot] = req.top_p
+
     def _admissible(self, req: ServeRequest) -> bool:
         """Pool-side admission gate. Contiguous: a free slot. Paged: a free
         slot AND enough free blocks for the prompt plus a one-block
         watermark (optimistic vLLM-style admission — later growth is served
-        on demand and backed by preemption, not reserved up front)."""
+        on demand and backed by preemption, not reserved up front).
+        Chunked: blocks are claimed chunk by chunk, so admission only needs
+        the FIRST chunk's block (+ watermark when the pool is busy)."""
         if self.pool.n_free == 0:
             return False
         if not self.paged:
             return True
-        n_prompt = max(1, min(len(req.prompt), self.pad_to))
-        need = self.pool.blocks_for(n_prompt)
+        if self.chunked:
+            need = 1
+        else:
+            n_prompt = max(1, min(len(req.prompt), self.pad_to))
+            need = self.pool.blocks_for(n_prompt)
         if self.pool.n_active == 0:
             # idle pool: every block is free and one worst-case request is
             # guaranteed to fit — gating on the watermark here could wedge
             return self.pool.n_free_blocks >= need
         return self.pool.n_free_blocks >= need + 1
 
+    def _next_candidate(self, now: float):
+        """(index, request) of the highest-priority ARRIVED request; stable
+        (leftmost wins ties, so preemption's requeue-front and FIFO order
+        survive within a class). Arrived requests are a queue prefix —
+        submit keeps arrivals sorted and preemption only prepends already-
+        arrived requests — so the scan stops at the first future arrival."""
+        best_i, best = None, None
+        for i, r in enumerate(self.waiting):
+            if r.t_arrival > now:
+                break
+            if best is None or r.priority > best.priority:
+                best_i, best = i, r
+        return best_i, best
+
     def _admit(self, now: float) -> None:
         if self.policy == "fixed" and self.active:
             return  # run-to-completion: no refill until the pool drains
-        while (
-            self.waiting
-            and self.waiting[0].t_arrival <= now
-            and self._admissible(self.waiting[0])
-        ):
-            self._admit_one(self.waiting.popleft(), now)
+        while True:
+            i, cand = self._next_candidate(now)
+            if cand is None or not self._admissible(cand):
+                return
+            del self.waiting[i]
+            if self.chunked:
+                self._admit_one_chunked(cand, now)
+            else:
+                self._admit_one(cand, now)
 
     # ---- paged back-pressure ---------------------------------------------
-    def _preempt(self, st: SlotState) -> None:
+    def _victim(self):
+        """Preemption victim: the YOUNGEST request of the LOWEST priority
+        among all residents — decoding slots AND half-prefilled chunk
+        cursors alike (a cursor is the cheapest victim: no tokens to
+        recompute, only chunks to replay)."""
+        cands: list = list(self.active.values())
+        if self.chunk_mgr is not None:
+            cands += list(self.chunk_mgr.cursors.values())
+        return min(cands, key=lambda s: (s.req.priority, -s.admit_seq))
+
+    def _preempt(self, st) -> None:
         """Out-of-blocks back-pressure: evict the slot, free its blocks,
         and requeue the request at the FRONT of the waiting queue for full
         recompute. Greedy decoding / per-(rid, step) sampling keys replay
-        the identical token stream, so preemption costs work, not tokens."""
-        del self.active[st.slot]
+        the identical token stream, so preemption costs work, not tokens.
+        ``st`` is a SlotState (decoding) or a ChunkCursor (mid-prefill —
+        the cursor is dropped and re-admission restarts at chunk zero)."""
+        if isinstance(st, ChunkCursor):
+            self.chunk_mgr.remove(st.slot)
+        else:
+            del self.active[st.slot]
         self.pool.evict(st.slot)
         self._temp[st.slot] = 0.0
         st.req.tokens = []
+        st.req.t_tokens = []
         self.waiting.appendleft(st.req)
         self.n_preemptions += 1
 
     def _ensure_blocks(self) -> None:
         """Before a paged decode step every active slot must own the block
         its next token writes into. Slots grow oldest-first; when the pool
-        runs dry the youngest active request is preempted (repeatedly if
-        needed). Terminates: BlockPool guarantees one worst-case request
-        fits, so the oldest slot can always run alone."""
+        runs dry the youngest lowest-priority resident is preempted
+        (repeatedly if needed). Terminates: BlockPool guarantees one
+        worst-case request fits, so the oldest slot can always run alone."""
         for slot, st in sorted(self.active.items(), key=lambda kv: kv[1].admit_seq):
             if slot not in self.active:
                 continue  # already preempted while growing an older slot
             while not self.pool.ensure(slot, st.kv_len):
-                victim = max(self.active.values(), key=lambda s: s.admit_seq)
+                victim = self._victim()
                 self._preempt(victim)
                 if victim is st:
-                    break  # this slot WAS the youngest; it queues
+                    break  # this slot WAS the victim; it queues
 
     # ---- decode ----------------------------------------------------------
-    def step(self) -> List[ServeRequest]:
-        """One pool-wide decode step; returns requests finished by it."""
-        if self.paged:
-            self._ensure_blocks()
-            if not self.active:  # everything preempted back to the queue
-                return []
-        self.pool.sync()
-        logits, cache = engine.decode_step(
-            self.model, self.params, self.pool.cache, jnp.asarray(self._token)
-        )
-        self.pool.cache = cache
+    def _sample(self, logits) -> np.ndarray:
         if not self._temp.any():  # all-greedy pool: skip the top-p pipeline
-            toks = np.asarray(sampling.greedy(logits))
-        else:
-            keys = sampling.slot_step_keys(
-                self.base_key, jnp.asarray(self._rid), jnp.asarray(self._ngen)
+            return np.asarray(sampling.greedy(logits))
+        keys = sampling.slot_step_keys(
+            self.base_key, jnp.asarray(self._rid), jnp.asarray(self._ngen)
+        )
+        return np.asarray(
+            sampling.sample_slots(
+                logits, keys, jnp.asarray(self._temp), jnp.asarray(self._top_p)
             )
-            toks = np.asarray(
-                sampling.sample_slots(
-                    logits, keys, jnp.asarray(self._temp), jnp.asarray(self._top_p)
-                )
-            )
+        )
+
+    def _record_step_metrics(self) -> None:
         self.n_decode_steps += 1
         self.occupancy_trace.append(self.pool.occupancy)
         if self.paged:
@@ -330,11 +442,23 @@ class Scheduler:
             self.peak_used_blocks = max(
                 self.peak_used_blocks, self.pool.n_used_blocks
             )
-        now = self._now()
+
+    def _harvest_stalls(self, now: float) -> None:
+        """Close every admission gap opened since the last step: residents
+        just got their next token, so the stall each admission imposed on
+        them is this commit minus the pre-admission commit."""
+        if self._stall_marks:
+            self.admission_stalls.extend(now - m for m in self._stall_marks)
+            self._stall_marks.clear()
+        self._last_commit_t = now
+
+    def _commit_decode(self, toks: np.ndarray, now: float) -> List[ServeRequest]:
+        self._harvest_stalls(now)
         done: List[ServeRequest] = []
         for slot, st in list(self.active.items()):
             token = int(toks[slot])
             st.req.tokens.append(token)
+            st.req.t_tokens.append(now)
             st.n_generated += 1
             st.kv_len += 1  # this step wrote the slot's K/V at kv_len
             self._token[slot] = token
@@ -348,6 +472,114 @@ class Scheduler:
                 self._temp[slot] = 0.0  # free slots decode greedy garbage
         return done
 
+    def step(self) -> List[ServeRequest]:
+        """One pool-wide step; returns requests finished by it. With
+        pending chunk cursors the step is the mixed-step executable;
+        otherwise (and always when not chunked) the plain decode step."""
+        if self.chunked and len(self.chunk_mgr):
+            return self._step_mixed()
+        return self._step_decode()
+
+    def _step_decode(self) -> List[ServeRequest]:
+        if self.paged:
+            self._ensure_blocks()
+            if not self.active:  # everything preempted back to the queue
+                return []
+        self.pool.sync()
+        logits, cache = engine.decode_step(
+            self.model, self.params, self.pool.cache, jnp.asarray(self._token)
+        )
+        self.pool.cache = cache
+        toks = self._sample(logits)
+        self._record_step_metrics()
+        return self._commit_decode(toks, self._now())
+
+    def _step_mixed(self) -> List[ServeRequest]:
+        """One token-budget mixed step: decode tokens for every live slot
+        PLUS up to ``prefill_budget`` prompt-chunk tokens (the plan from
+        core/prefill.py), dispatched as ONE compiled executable — admission
+        rides the pool-wide step instead of stalling it."""
+        self._ensure_blocks()  # decode growth first (victims incl. cursors)
+        # pack, then back every chunk's span with blocks; a starved cursor
+        # is excluded and the plan rebuilt so its budget share flows to
+        # cursors whose chunks ARE backed (no budget hoarding)
+        starved: set = set()
+        while True:
+            plan = self.chunk_mgr.plan(self._token, list(self.active),
+                                       skip=starved)
+            kept = list(plan.chunks)
+            newly = [ch.slot for ch in plan.chunks
+                     if not self.pool.ensure(ch.slot, ch.start + ch.t - 1)]
+            if not newly:
+                break
+            starved.update(newly)
+        if not kept:
+            if self.active:
+                # every pending chunk is block-starved: run the cheap
+                # 1-lane decode executable, not a C-lane mixed step that
+                # would carry zero prefill tokens
+                return self._step_decode()
+            # nothing runnable: several cursors wedged on blocks — free the
+            # youngest lowest-priority one and retry on the next loop turn
+            if len(self.chunk_mgr) <= 1:
+                raise RuntimeError(
+                    "single prefill cursor wedged: BlockPool must fit one "
+                    "worst-case request"
+                )
+            self._preempt(self._victim())
+            return []
+        # authoritative per-slot write positions from host state: plain
+        # decode steps drift the device counters of free and mid-prefill
+        # rows (every row increments), so the mixed step pins them — inside
+        # its own executable, no resync dispatch — before any write
+        base = np.zeros((self.slots,), np.int32)
+        for slot, st in self.active.items():
+            base[slot] = st.kv_len
+        for slot, cur in self.chunk_mgr.cursors.items():
+            base[slot] = cur.pos
+        self.pool.sync()
+        logits, cache = engine.mixed_step(
+            self.model, self.params, self.pool.cache,
+            jnp.asarray(plan.tokens), jnp.asarray(plan.t_new),
+            jnp.asarray(base),
+        )
+        self.pool.cache = cache
+        toks = self._sample(logits)
+        self._record_step_metrics()
+        self.n_mixed_steps += 1
+        now = self._now()
+        done = self._commit_decode(toks, now)
+        for ch in kept:
+            cur = self.chunk_mgr.advance(ch)
+            self.n_chunks += 1
+            self.n_chunk_tokens += ch.t
+            if cur.done:
+                self.chunk_mgr.remove(ch.slot)
+                self._finish_prefill(cur, int(toks[ch.slot]), now)
+        return done
+
+    def _finish_prefill(self, cur: ChunkCursor, first: int, now: float) -> None:
+        """The final chunk's last-lane logits ARE the first-token logits:
+        commit the request's first token and flip the slot from prefill to
+        decode (its device length already equals the prompt length)."""
+        req = cur.req
+        req.t_first = now
+        req.tokens.append(first)
+        req.t_tokens.append(now)
+        state = SlotState(
+            req=req, slot=cur.slot, n_generated=1, kv_len=cur.n_prompt,
+            admit_seq=cur.admit_seq,
+        )
+        if state.finished(first, self.eos_id):
+            req.t_done = now
+            self.finished.append(req)
+            self.pool.evict(cur.slot)
+            self._temp[cur.slot] = 0.0
+            return
+        self.active[cur.slot] = state
+        self._token[cur.slot] = first
+        self._ngen[cur.slot] = 1
+
     # ---- driver ----------------------------------------------------------
     def run(self, requests: List[ServeRequest]) -> List[ServeRequest]:
         """Serve ``requests`` to completion; returns them in finish order.
@@ -355,9 +587,13 @@ class Scheduler:
         invisible to admission until ``t0 + t_arrival``."""
         self.submit(requests)
         self._t0 = self.clock()
-        while self.waiting or self.active:
+        while self.waiting or self.active or (
+            self.chunk_mgr is not None and len(self.chunk_mgr)
+        ):
             self._admit(self._now())
-            if not self.active:
+            if not self.active and not (
+                self.chunk_mgr is not None and len(self.chunk_mgr)
+            ):
                 if self.waiting:  # pool idle, next request not arrived yet
                     wait = self.waiting[0].t_arrival - self._now()
                     if wait > 0:

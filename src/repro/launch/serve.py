@@ -12,10 +12,18 @@ machinery to the seed's run-to-completion batcher for A/B comparison.
 block-pool (core/slot_pool.BlockPool): same token streams, but the cache
 only reserves ``num_blocks * block_size`` tokens instead of
 ``slots * (pad_to + max_new_cap)`` — the Fig 1 capacity lever.
+``--chunked`` (with ``--paged``) turns admission itself into pool-wide
+work: prompts stream into their slot's KV blocks ``--prefill-budget``
+tokens per step inside the mixed-step executable (core/prefill.py), so a
+new request never freezes resident decoding behind a full prefill.
 
 Reported per request: TTFT (arrival -> first token), TPOT (mean inter-
-token), e2e latency; aggregate: tokens/s and mean slot-occupancy (the
-direct idle-time metric — fraction of decode-slot work that was real).
+token), e2e latency; aggregate: tokens/s, mean slot-occupancy (the
+direct idle-time metric — fraction of decode-slot work that was real),
+and the decode-stall-per-admission metric (chunked prefill's target):
+for each admission that landed while residents were decoding, the
+inter-step interval its work sat inside — i.e. the inter-token gap it
+imposed on every resident (p50 gates, max shows the tail).
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --n-requests 8 --batch-slots 4 --max-new 16 --arrival-rate 16
@@ -157,7 +165,8 @@ def run_scheduler(
     slots: int, pad_to: int, max_new_cap: int,
     eos_id: Optional[int] = None, policy: str = "continuous",
     paged: bool = False, block_size: int = 16,
-    num_blocks: Optional[int] = None, seed: int = 0,
+    num_blocks: Optional[int] = None, chunked: bool = False,
+    prefill_budget: Optional[int] = None, seed: int = 0,
     return_requests: bool = False,
 ):
     """Serve one trace; returns metrics (plus the scheduler's counters).
@@ -167,18 +176,33 @@ def run_scheduler(
     sched = Scheduler(
         model, params, slots=slots, pad_to=pad_to, max_new_cap=max_new_cap,
         eos_id=eos_id, policy=policy, paged=paged, block_size=block_size,
-        num_blocks=num_blocks, base_key=jax.random.PRNGKey(seed),
+        num_blocks=num_blocks, chunked=chunked, prefill_budget=prefill_budget,
+        base_key=jax.random.PRNGKey(seed),
     )
     t0 = time.perf_counter()
     done = sched.run(requests)
     wall = time.perf_counter() - t0
     m = serve_metrics(done, wall)
+    # decode-stall-per-admission, measured directly by the scheduler: the
+    # inter-step (= resident inter-token) interval each admission's work
+    # sat inside. The p50 is the noise-robust gate statistic — EVERY
+    # unchunked admission pays a full prefill inside its gap, so the
+    # median separates chunked/unchunked structurally; the max is
+    # reported for tail visibility but is wall-clock-noise dominated.
+    stalls = np.asarray(sched.admission_stalls, np.float64)
     m.update(
         wall_s=wall,
         decode_steps=sched.n_decode_steps,
         prefills=sched.n_prefills,
         mean_slot_occupancy=sched.mean_occupancy,
         kv_reserved_bytes=sched.pool.reserved_bytes,
+        n_admission_stalls=len(stalls),
+        admission_stall_p50_ms=(
+            float(np.percentile(stalls, 50)) * 1e3 if len(stalls) else 0.0
+        ),
+        admission_stall_max_ms=(
+            float(stalls.max()) * 1e3 if len(stalls) else 0.0
+        ),
     )
     if paged:
         token_bytes = sched.pool.reserved_bytes / max(
@@ -191,6 +215,13 @@ def run_scheduler(
                 sched.peak_used_blocks * sched.pool.block_size * token_bytes
             ),
         )
+    if chunked:
+        m.update(
+            mixed_steps=sched.n_mixed_steps,
+            prefill_chunks=sched.n_chunks,
+            prefill_chunk_tokens=sched.n_chunk_tokens,
+            full_prefills=sched.n_prefills,  # must stay 0 under chunking
+        )
     if return_requests:
         return m, done
     return m
@@ -198,13 +229,15 @@ def run_scheduler(
 
 def warmup(model, params, *, slots: int, pad_to: int, max_new_cap: int,
            paged: bool = False, block_size: int = 16,
-           num_blocks: Optional[int] = None) -> None:
+           num_blocks: Optional[int] = None, chunked: bool = False,
+           prefill_budget: Optional[int] = None) -> None:
     """Compile the serving executables (single-slot prefill, pool decode
-    step, slot scatter — plus block copy/length scatter when paged) before
-    any timed run."""
+    step, slot scatter — plus block copy/length scatter when paged, plus
+    the mixed step when chunked) before any timed run."""
     sched = Scheduler(
         model, params, slots=slots, pad_to=pad_to, max_new_cap=max_new_cap,
         paged=paged, block_size=block_size, num_blocks=num_blocks,
+        chunked=chunked, prefill_budget=prefill_budget,
     )
     rng = np.random.default_rng(0)
     sched.run([
@@ -228,6 +261,13 @@ def main(argv=None):
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="physical KV blocks incl. the sink block; default "
                          "= full per-slot parity (no memory saving)")
+    ap.add_argument("--chunked", action="store_true",
+                    help="chunked prefill (requires --paged): admission "
+                         "streams prompts into KV blocks inside the "
+                         "pool-wide mixed step instead of stalling it")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="prefill tokens per mixed step; default = "
+                         "--block-size")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrivals per second; 0 = all at t=0")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -238,6 +278,8 @@ def main(argv=None):
     ap.add_argument("--profile", default="llama_humaneval",
                     choices=sorted(data_mod.PAPER_PROFILES))
     args = ap.parse_args(argv)
+    if args.chunked and not args.paged:
+        ap.error("--chunked requires --paged (chunks append into KV blocks)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = get_model(cfg)
@@ -253,26 +295,36 @@ def main(argv=None):
     )
     warmup(model, params, slots=args.batch_slots, pad_to=pad_to,
            max_new_cap=args.max_new, paged=args.paged,
-           block_size=args.block_size, num_blocks=args.num_blocks)
+           block_size=args.block_size, num_blocks=args.num_blocks,
+           chunked=args.chunked, prefill_budget=args.prefill_budget)
     m = run_scheduler(
         model, params, reqs, slots=args.batch_slots, pad_to=pad_to,
         max_new_cap=args.max_new, eos_id=args.eos_id, policy=args.policy,
         paged=args.paged, block_size=args.block_size,
-        num_blocks=args.num_blocks, seed=args.seed,
+        num_blocks=args.num_blocks, chunked=args.chunked,
+        prefill_budget=args.prefill_budget, seed=args.seed,
     )
-    mode = args.policy + ("/paged" if args.paged else "")
+    mode = args.policy + ("/paged" if args.paged else "") + (
+        "/chunked" if args.chunked else "")
     print(f"[serve/{mode}] {m['n_requests']} requests in "
           f"{m['wall_s']:.2f}s | {m['tokens_per_s']:.1f} tok/s | "
           f"occupancy={m['mean_slot_occupancy']:.2f} | "
           f"ttft p50={m['ttft_p50_ms']:.0f}ms p99={m['ttft_p99_ms']:.0f}ms | "
           f"tpot p50={m['tpot_p50_ms']:.1f}ms | "
           f"e2e p50={m['e2e_p50_s']:.2f}s p99={m['e2e_p99_s']:.2f}s | "
+          f"stall p50={m['admission_stall_p50_ms']:.1f}ms "
+          f"max={m['admission_stall_max_ms']:.1f}ms | "
           f"kv reserved={m['kv_reserved_bytes'] / 1e6:.1f}MB")
     if args.paged:
         print(f"[serve/{mode}] block occupancy="
               f"{m['mean_block_occupancy']:.2f} | "
               f"preemptions={m['n_preemptions']} | "
               f"kv used peak={m['kv_used_peak_bytes'] / 1e6:.1f}MB")
+    if args.chunked:
+        print(f"[serve/{mode}] mixed steps={m['mixed_steps']} | "
+              f"chunks={m['prefill_chunks']} "
+              f"({m['prefill_chunk_tokens']} tokens) | "
+              f"full prefills={m['full_prefills']}")
     return m
 
 

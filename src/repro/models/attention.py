@@ -12,6 +12,11 @@ Modes:
                attends causally over the in-flight K/V.
 - ``decode``:  one token per slot; vmapped dynamic_update_slice write at
                ``lengths % cache_len``; decode attention over the cache.
+- ``mixed``:   paged caches only (chunked prefill): a per-slot chunk of
+               ``t_new[b]`` tokens (0 = idle row, 1 = plain decode) written
+               straight into the slot's blocks, then chunk-query flash
+               attention against the slot's existing paged K/V plus the
+               chunk itself (intra-chunk causal via query positions).
 """
 from __future__ import annotations
 
@@ -109,10 +114,70 @@ def paged_gather(buf: jnp.ndarray, bt: jnp.ndarray) -> jnp.ndarray:
     """Materialize each slot's logical K/V view: buf [NB, bs, ...] gathered
     through bt [B, MB] -> [B, MB * bs, ...]. The gather is a transient
     activation (same read set the contiguous decode touches); the memory
-    the pool *reserves* is only ``NB * bs`` tokens."""
+    the pool *reserves* is only ``NB * bs`` tokens. Single-token decode no
+    longer pays this transient (see :func:`paged_decode_attention`); it is
+    kept for the chunk-query mixed step, where the one gather is amortized
+    over a whole prefill chunk of queries, and for tests."""
     b, mb = bt.shape
     g = buf[bt]  # [B, MB, bs, ...]
     return g.reshape((b, mb * buf.shape[1]) + buf.shape[2:])
+
+
+def paged_write_chunk(buf: jnp.ndarray, new: jnp.ndarray, bt: jnp.ndarray,
+                      lengths: jnp.ndarray, t_new: jnp.ndarray) -> jnp.ndarray:
+    """Scatter one per-slot K/V chunk straight into the block pool (chunked
+    prefill): buf [NB, bs, ...], new [B, C, ...]. Lane ``j`` of slot ``b``
+    lands at logical position ``lengths[b] + j`` — physical block
+    ``bt[b, pos // bs]``, offset ``pos % bs`` — iff ``j < t_new[b]``.
+    Invalid lanes (a final partial chunk's padding, decode rows beyond lane
+    0, idle rows with ``t_new == 0``) are routed to the reserved sink block
+    0, the same rule that makes freed slots' decode writes harmless. Live
+    slots own disjoint blocks and each slot's valid lanes hit distinct
+    positions, so valid writes never collide. No dense ``pad_to`` row is
+    ever materialized: the chunk goes from the layer's K/V projections
+    directly into the slot's blocks."""
+    bs = buf.shape[1]
+    c = new.shape[1]
+    pos = lengths[:, None] + jnp.arange(c)[None]  # [B, C] logical positions
+    blk = jnp.clip(pos // bs, 0, bt.shape[1] - 1)
+    phys = jnp.take_along_axis(bt, blk, axis=1)  # [B, C]
+    valid = jnp.arange(c)[None] < t_new[:, None]
+    phys = jnp.where(valid, phys, 0)
+    return buf.at[phys, pos % bs].set(new.astype(buf.dtype))
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,  # [B, Hq, D]
+    kbuf: jnp.ndarray,  # [NB, bs, Hkv, D] or [NB, bs, D] (shared-head latent)
+    vbuf: Optional[jnp.ndarray],  # like kbuf, or None: V = K[..., :v_dim]
+    bt: jnp.ndarray,  # [B, MB] block table
+    n_valid: jnp.ndarray,  # [B] valid cached tokens per slot
+    *,
+    scale: Optional[float] = None,
+    v_dim: Optional[int] = None,
+) -> jnp.ndarray:
+    """Flash-decode straight off the physical block pool: one logical block
+    per step, gathered per-(slot, block) as a [B, bs, ...] scratch that the
+    scan reuses — the full [B, MB * bs, ...] per-layer transient the old
+    ``paged_gather`` decode materialized never exists. Indexing is pure
+    gather (``buf[phys]``), no ``dynamic_slice``; per-block partials are
+    LSE-combined exactly like the sequence-parallel decode path.
+    ``vbuf=None`` with ``v_dim`` serves MLA's absorbed latent, where V is
+    the leading slice of the cached K."""
+    bs = kbuf.shape[1]
+    mb = bt.shape[1]
+
+    def body(j):
+        phys = bt[:, j]  # [B]
+        kj = kbuf[phys]  # [B, bs, ...] — the only per-block scratch
+        vj = vbuf[phys] if vbuf is not None else kj[..., :v_dim]
+        if kj.ndim == 3:  # shared-head latent: add the Hkv=1 axis
+            kj, vj = kj[:, :, None, :], vj[:, :, None, :]
+        k_valid = (j * bs + jnp.arange(bs))[None, :] < n_valid[:, None]
+        return ops.decode_attention_partial(q, kj, vj, k_valid, scale=scale)
+
+    accs, ms, ls = jax.lax.map(body, jnp.arange(mb))
+    return ops.combine_partial_attention(accs, ms, ls).astype(q.dtype)
 
 
 def _sp_decode(cache, k_new, v_new, q, lengths):
@@ -212,6 +277,7 @@ def attention(
     window: Optional[int] = None,
     impl: str = "auto",
     bidirectional: bool = False,
+    t_new: Optional[jnp.ndarray] = None,  # [B] chunk widths (mixed mode)
 ) -> Tuple[jnp.ndarray, Optional[dict]]:
     b, t, d = x.shape
     hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -241,7 +307,7 @@ def attention(
             q, k, v, q_positions=positions, k_positions=positions,
             causal=not bidirectional, window=window, impl=impl,
         )
-    elif mode == "decode" and "bt" in cache:
+    elif mode in ("decode", "mixed") and "bt" in cache:
         if window is not None:
             raise NotImplementedError("paged cache unsupported on ring/window")
         if SP_MESH is not None:
@@ -250,16 +316,37 @@ def attention(
             )
         bt = cache["bt"]  # [B, max_blocks] int32
         bs = cache["k"].shape[1]
-        new_cache = {
-            "k": paged_write_token(cache["k"], k[:, 0], bt, lengths),
-            "v": paged_write_token(cache["v"], v[:, 0], bt, lengths),
-            "bt": bt,
-        }
-        n_valid = valid_counts(lengths + 1, bt.shape[1] * bs)
-        out = ops.decode_attention(
-            q[:, 0], paged_gather(new_cache["k"], bt),
-            paged_gather(new_cache["v"], bt), n_valid, impl=impl,
-        )[:, None]
+        if mode == "decode":
+            new_cache = {
+                "k": paged_write_token(cache["k"], k[:, 0], bt, lengths),
+                "v": paged_write_token(cache["v"], v[:, 0], bt, lengths),
+                "bt": bt,
+            }
+            n_valid = valid_counts(lengths + 1, bt.shape[1] * bs)
+            out = paged_decode_attention(
+                q[:, 0], new_cache["k"], new_cache["v"], bt, n_valid,
+            )[:, None]
+        else:
+            # mixed step: write each slot's chunk (decode rows are width-1
+            # chunks) into its blocks, then chunk-query flash attention over
+            # the slot's gathered logical view — prior blocks AND the chunk
+            # just written, intra-chunk causality via the query positions.
+            new_cache = {
+                "k": paged_write_chunk(cache["k"], k, bt, lengths, t_new),
+                "v": paged_write_chunk(cache["v"], v, bt, lengths, t_new),
+                "bt": bt,
+            }
+            s_log = bt.shape[1] * bs
+            kpos = jnp.broadcast_to(jnp.arange(s_log)[None], (b, s_log))
+            k_valid = jnp.arange(s_log)[None] < (lengths + t_new)[:, None]
+            out = ops.flash_attention(
+                q, paged_gather(new_cache["k"], bt),
+                paged_gather(new_cache["v"], bt),
+                q_positions=positions, k_positions=kpos, causal=True,
+                k_valid=k_valid, impl=impl,
+            )
+    elif mode == "mixed":
+        raise ValueError("mixed mode requires a paged (block-table) cache")
     elif mode == "decode":
         if SP_MESH is not None and window is None:
             out, new_cache = _sp_decode(cache, k[:, 0], v[:, 0], q[:, 0], lengths)
@@ -379,6 +466,7 @@ def mla_attention(
     cache: Optional[dict],
     mode: str,
     impl: str = "auto",
+    t_new: Optional[jnp.ndarray] = None,  # [B] chunk widths (mixed mode)
 ) -> Tuple[jnp.ndarray, Optional[dict]]:
     m = cfg.mla
     b, t, _ = x.shape
@@ -404,16 +492,28 @@ def mla_attention(
                     cache["latent"], jnp.concatenate([c_kv, k_rope], axis=-1)
                 ),
             }
-    elif mode in ("decode", "extend"):
+    elif mode in ("decode", "extend", "mixed"):
         paged = "bt" in cache
         if paged and mode == "extend":
             raise NotImplementedError("extend unsupported on paged caches")
+        if mode == "mixed" and not paged:
+            raise ValueError("mixed mode requires a paged (block-table) cache")
         latent_new = jnp.concatenate([c_kv, k_rope], axis=-1)  # tiny: [B,T,r+rope]
-        if paged:
+        lat = None
+        if paged and mode == "decode":
             bt = cache["bt"]
             new_cache = {
                 "latent": paged_write_token(
                     cache["latent"], latent_new[:, 0], bt, lengths
+                ),
+                "bt": bt,
+            }
+            s = bt.shape[1] * cache["latent"].shape[1]  # logical view length
+        elif paged:  # mixed: per-slot latent chunk straight into the blocks
+            bt = cache["bt"]
+            new_cache = {
+                "latent": paged_write_chunk(
+                    cache["latent"], latent_new, bt, lengths, t_new
                 ),
                 "bt": bt,
             }
@@ -441,17 +541,28 @@ def mla_attention(
         w_uv = w_up[:, :, m.qk_nope_dim:]  # [r, H, v]
         q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, w_uk)  # [B,T,H,r]
         q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)  # [B,T,H,r+rope]
-        k_eff = lat  # K = whole latent buffer (no copy; paged: gathered view)
-        v_eff = lat[:, :, : m.kv_lora_rank]  # V = slice
-        if mode == "decode":
+        if mode == "decode" and paged:
+            # blockwise flash-decode off the latent block pool (no gathered
+            # [B, MB*bs, r+rope] transient); V is the latent's leading slice
+            n_valid = valid_counts(lengths + 1, s)
+            ctx_lat = paged_decode_attention(
+                q_eff[:, 0], new_cache["latent"], None, bt, n_valid,
+                scale=scale, v_dim=m.kv_lora_rank,
+            )[:, None]  # [B,1,H,r]
+        elif mode == "decode":
+            k_eff = lat  # K = whole latent buffer (no copy)
+            v_eff = lat[:, :, : m.kv_lora_rank]  # V = slice
             n_valid = valid_counts(lengths + 1, s)
             ctx_lat = ops.decode_attention(
                 q_eff[:, 0], k_eff[:, :, None, :], v_eff[:, :, None, :],
                 n_valid, scale=scale, impl=impl,
             )[:, None]  # [B,1,H,r]
-        else:
+        else:  # extend / mixed: chunk-query flash over the logical view
+            k_eff = lat  # paged mixed: gathered view (amortized over chunk)
+            v_eff = lat[:, :, : m.kv_lora_rank]  # V = slice
+            ext = t_new if mode == "mixed" else t  # per-slot or uniform width
             kpos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
-            k_valid = jnp.arange(s)[None] < (lengths + t)[:, None]
+            k_valid = jnp.arange(s)[None] < (lengths + ext)[:, None]
             ctx_lat = ops.flash_attention(
                 q_eff, k_eff[:, :, None, :], v_eff[:, :, None, :],
                 q_positions=positions, k_positions=kpos, causal=True,

@@ -58,9 +58,11 @@ def layer_forward(
     cache: Optional[dict],
     mode: str,
     impl: str = "auto",
+    t_new: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
     h = L.rmsnorm(p["attn_norm"], x, cfg.rmsnorm_eps)
-    kw = dict(positions=positions, lengths=lengths, cache=cache, mode=mode, impl=impl)
+    kw = dict(positions=positions, lengths=lengths, cache=cache, mode=mode,
+              impl=impl, t_new=t_new)
     if cfg.mla is not None:
         attn_out, new_cache = A.mla_attention(cfg, p["attn"], h, **kw)
     else:
@@ -147,6 +149,9 @@ def forward(
     else:
         lengths = cache["lengths"]
         positions = lengths[:, None] + jnp.arange(t)[None]
+    # mixed (chunked-prefill) step: per-slot chunk widths [B]; lanes beyond
+    # t_new[b] are padding (writes hit the sink block, outputs discarded)
+    t_new = batch.get("t_new") if mode == "mixed" else None
 
     x = L.embed(params["embed"], tokens)
     aux_total = jnp.float32(0.0)
@@ -172,7 +177,7 @@ def forward(
             lc = dict(lc, bt=bt)
         x, nlc, aux = layer_fn(
             cfg, lp, x, layer=i, positions=positions, lengths=lengths,
-            cache=lc, mode=mode, impl=impl,
+            cache=lc, mode=mode, impl=impl, t_new=t_new,
         )
         if bt is not None and nlc is not None:
             nlc = {k: v for k, v in nlc.items() if k != "bt"}
@@ -197,6 +202,13 @@ def forward(
             body, (x, aux_total), (params["scanned"], scanned_cache)
         )
 
+    if mode == "mixed":
+        # only each slot's LAST valid lane is ever read (a decode slot's
+        # next-token logits / a finishing prefill's first-token logits):
+        # gather it before the unembed so the vocab projection runs on one
+        # lane per slot, not the whole chunk width
+        idx = jnp.maximum(t_new - 1, 0)
+        x = jnp.take_along_axis(x, idx[:, None, None], axis=1)  # [B, 1, d]
     x = L.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
     if cfg.tie_embeddings:
         logits = L.unembed(params["embed"], x)
@@ -209,6 +221,8 @@ def forward(
         # decode: one token per slot.
         if mode == "prefill":
             new_len = batch.get("prompt_lengths", jnp.full((b,), t, jnp.int32))
+        elif mode == "mixed":  # per-slot chunk widths (0 for idle rows)
+            new_len = cache["lengths"] + t_new
         else:  # decode / extend
             new_len = cache["lengths"] + t
         new_cache = {"lengths": new_len, "layers": new_layers}

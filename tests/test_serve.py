@@ -192,6 +192,86 @@ def test_paged_pool_matches_generate_with_eos(llama):
         np.testing.assert_array_equal(got.padded_output(eos_id), want)
 
 
+def test_preemption_replay_token_identical_under_sampling(llama):
+    """Satellite: preempt -> full recompute must be token-identical even
+    with temperature > 0 — the per-(rid, step) fold_in keys make the
+    replayed stream independent of slot placement, batch mates, and how
+    many times the request was restarted. A block-starved pool (forced
+    preemptions) and a roomy one must emit identical tokens."""
+    model, params = llama
+    rng = np.random.default_rng(4)
+    reqs = [
+        ServeRequest(
+            rid=i, prompt=rng.integers(0, model.config.vocab_size, size=8),
+            max_new=16, temperature=0.8, top_p=0.9,
+        )
+        for i in range(4)
+    ]
+    outs = {}
+    preempts = {}
+    # max_len=25, bs=4: 7 blocks/request worst case; 8 usable cannot hold
+    # two full requests => guaranteed mid-decode preemption in the tight arm
+    for tag, num_blocks in (("tight", 8), ("roomy", 15)):
+        sched = Scheduler(
+            model, params, slots=2, pad_to=8, max_new_cap=16,
+            paged=True, block_size=4, num_blocks=num_blocks,
+            base_key=jax.random.PRNGKey(9),
+        )
+        done = sched.run([dataclasses.replace(r, tokens=[], t_tokens=[])
+                          for r in reqs])
+        assert len(done) == len(reqs)
+        outs[tag] = {d.rid: list(d.tokens) for d in done}
+        preempts[tag] = sched.n_preemptions
+    assert preempts["tight"] >= 1 and preempts["roomy"] == 0
+    assert outs["tight"] == outs["roomy"], \
+        "preemption replay diverged under stochastic sampling"
+
+
+def test_priority_orders_admission(llama):
+    """Satellite: the admission loop picks the highest-priority arrived
+    request (stable FIFO within a class) — with one slot, finish order
+    follows priority, not submission order."""
+    model, params = llama
+    rng = np.random.default_rng(5)
+    reqs = [
+        ServeRequest(rid=i,
+                     prompt=rng.integers(0, model.config.vocab_size, size=4),
+                     max_new=3, priority=p)
+        for i, p in enumerate([0, 5, 1, 0])
+    ]
+    sched = Scheduler(model, params, slots=1, pad_to=PAD_TO, max_new_cap=3)
+    done = sched.run([dataclasses.replace(r, tokens=[], t_tokens=[])
+                      for r in reqs])
+    assert [d.rid for d in done] == [1, 2, 0, 3]  # priority, then FIFO
+
+
+def test_preemption_victim_is_youngest_lowest_priority(llama):
+    """Satellite: the preemption ladder targets the LOWEST priority class
+    and the youngest request inside it — never the high-priority slot."""
+    model, params = llama
+    rng = np.random.default_rng(6)
+
+    def req(rid, priority):
+        return ServeRequest(
+            rid=rid, prompt=rng.integers(0, model.config.vocab_size, size=4),
+            max_new=8, priority=priority,
+        )
+
+    sched = Scheduler(
+        model, params, slots=3, pad_to=PAD_TO, max_new_cap=8,
+        paged=True, block_size=4, num_blocks=22,
+    )
+    sched._t0 = sched.clock()
+    for r in (req(0, 0), req(1, 0), req(2, 3)):  # old p0, young p0, p3
+        sched._admit_one(r, 0.0)
+    victim = sched._victim()
+    assert victim.req.rid == 1  # youngest of the lowest priority class
+    sched._preempt(victim)
+    assert sched.waiting[0].rid == 1 and 1 not in {
+        st.req.rid for st in sched.active.values()
+    }
+
+
 def test_scheduler_timestamps_and_occupancy(llama):
     model, params = llama
     rng = np.random.default_rng(3)
