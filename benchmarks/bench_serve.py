@@ -16,6 +16,13 @@ allocation differ:
               and prompts ride the pool-wide mixed step (up to
               --prefill-budget tokens each), so residents never stall
               behind a full prefill program
+  profile-mix a mixed greedy/beam/contrastive trace (core/profiles.py)
+              through the paged+chunked scheduler: beam requests are
+              n-beam slot GROUPS whose Obs #4 KV reorder runs as a
+              host-side block-table permutation. Gates: every request
+              token-identical to its batch-at-a-time engine, ZERO device
+              cache reorders, and zero new KV device buffers (reserved
+              bytes constant; CoW copies write into the static pool)
 
 Rows report tokens/s, mean slot-occupancy, the continuous/fixed speedup,
 and the paged arm's reserved-KV-bytes ratio vs contiguous (the gate:
@@ -137,6 +144,101 @@ def _ab(n_requests: int = N_REQUESTS, arrival_rate: float = 200.0, seed: int = 0
     return results, tokens
 
 
+def _profile_mix_gate(n_requests: int = 12, arrival_rate: float = 200.0,
+                      seed: int = 0, verbose: bool = True):
+    """The profile-mix leg: serve a mixed greedy/beam/contrastive Poisson
+    trace through the paged+chunked scheduler and check (1) every request
+    is token-identical to its batch-at-a-time engine under greedy
+    settings, (2) the paged beam reorder ran as block-table permutation —
+    zero device cache reorders — and (3) no new KV device buffers were
+    allocated (the pool's reserved bytes are constant; copy-on-write
+    unshares are donated block copies INSIDE the static allocation).
+    Returns (ok, stats)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import engine, profiles
+    from repro.core.scheduler import Scheduler
+
+    model, params = _smoke_model()
+    cfg = model.config
+    max_new_cap = 16  # keeps the batch-engine references cheap
+    n_beams, guidance, beam_eos = 2, 2.0, 2
+    prof = data_mod.PAPER_PROFILES[PROFILE]
+    reqs = serve.poisson_trace(
+        prof, n_requests, pad_to=PAD_TO, max_new_cap=max_new_cap,
+        vocab_size=cfg.vocab_size, arrival_rate=arrival_rate, seed=seed,
+    )
+    serve.apply_profile_mix(reqs, "greedy,beam,contrastive",
+                            n_beams=n_beams, beam_eos_id=beam_eos,
+                            guidance=guidance)
+    sched = Scheduler(
+        model, params, slots=SLOTS, pad_to=PAD_TO, max_new_cap=max_new_cap,
+        paged=True, block_size=BLOCK_SIZE, num_blocks=NUM_BLOCKS,
+        chunked=True, prefill_budget=PREFILL_BUDGET,
+        base_key=jax.random.PRNGKey(seed),
+    )
+    reserved_before = sched.pool.reserved_bytes
+    done = sched.run(reqs)
+    reserved_after = sched.pool.reserved_bytes
+
+    mismatches = []
+    for r in reqs:
+        got = next(d for d in done if d.rid == r.rid)
+        prompt = jnp.asarray(np.asarray(r.prompt, np.int32)[None, :])
+        if isinstance(r.profile, profiles.BeamProfile):
+            ref = engine.generate_beam(
+                model, params, n_beams=n_beams, eos_id=beam_eos,
+                max_new_tokens=r.max_new, prompt_tokens=prompt,
+            )
+            want = np.asarray(ref["tokens"])[0][: len(got.tokens)]
+            score_ok = abs(got.score - float(ref["scores"][0])) < 1e-4
+        elif isinstance(r.profile, profiles.ContrastiveProfile):
+            ref = engine.generate_contrastive(
+                model, params, prompt, uncond_token=0,
+                n_image_tokens=r.max_new, guidance=guidance,
+            )
+            want = np.asarray(ref["tokens"])[0][: len(got.tokens)]
+            score_ok = True
+        else:
+            ref = engine.generate(
+                model, params, prompt, max_new_tokens=r.max_new,
+            )
+            want = np.asarray(ref["tokens"])[0][: len(got.tokens)]
+            score_ok = True
+        if list(got.tokens) != [int(t) for t in want] or not score_ok:
+            mismatches.append(r.rid)
+
+    stats = dict(
+        n_done=len(done),
+        groups=sched.n_group_admissions,
+        block_permutes=sched.n_block_permutes,
+        cache_reorders=sched.n_cache_reorders,
+        cow_copies=sched.pool.n_cow_copies,
+        preemptions=sched.n_preemptions,
+        reserved_delta=reserved_after - reserved_before,
+        mismatches=mismatches,
+    )
+    ok = (
+        len(done) == n_requests
+        and not mismatches
+        and sched.n_group_admissions >= 2 * (n_requests // 3)
+        and sched.n_block_permutes >= 1  # beam reorder actually exercised
+        and sched.n_cache_reorders == 0  # never the device-gather fallback
+        and reserved_after == reserved_before  # zero new KV device buffers
+    )
+    if verbose:
+        print(f"profile-mix: {stats['n_done']}/{n_requests} done  "
+              f"groups={stats['groups']}  "
+              f"block_permutes={stats['block_permutes']}  "
+              f"cache_reorders={stats['cache_reorders']}  "
+              f"cow_copies={stats['cow_copies']}  "
+              f"preemptions={stats['preemptions']}  "
+              f"reserved_delta={stats['reserved_delta']}B  "
+              f"token-mismatches={stats['mismatches']}")
+    return ok, stats
+
+
 def _paged_decode_no_growth():
     """Satellite gate: lower the paged decode-step executable and assert no
     intermediate carries the full gathered per-slot K/V sequence — neither
@@ -206,12 +308,32 @@ def main(argv=None) -> int:
     ap.add_argument("--chunked", action="store_true",
                     help="add the chunked-prefill arm (requires --paged) "
                          "+ its stall/identity gates")
+    ap.add_argument("--profile-mix", action="store_true",
+                    help="run ONLY the mixed greedy/beam/contrastive leg "
+                         "(requires --paged --chunked): slot groups over "
+                         "the paged pool, gated on token identity vs the "
+                         "batch engines and on the beam reorder allocating "
+                         "zero new KV device buffers")
     ap.add_argument("--n-requests", type=int, default=N_REQUESTS)
     ap.add_argument("--arrival-rate", type=float, default=200.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.chunked and not args.paged:
         ap.error("--chunked requires --paged")
+    if args.profile_mix and not (args.paged and args.chunked):
+        ap.error("--profile-mix requires --paged --chunked")
+
+    if args.profile_mix:
+        # fully deterministic leg (greedy settings end to end): no retry
+        ok, _ = _profile_mix_gate(seed=args.seed,
+                                  arrival_rate=args.arrival_rate)
+        if not args.smoke:
+            return 0
+        print("SMOKE " + ("PASS" if ok else
+                          "FAIL: need every profile token-identical to its "
+                          "batch engine, zero device cache reorders, and "
+                          "zero new KV device buffers"))
+        return 0 if ok else 1
 
     if args.paged:
         # paged leg: continuous + paged (+ chunked) arms only. Token

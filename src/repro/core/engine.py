@@ -1,12 +1,9 @@
-"""Generation engine: prefill + static-cache decode loops.
+"""Generation engine: step primitives + ONE profile-driven decode loop.
 
 This is the paper's end-to-end inference pipeline (§3.2): a single jitted
 prefill program and a single jitted decode-step program with static shapes
 (the §4.1.2 lever) — every decode step replays the same compiled
-executable, the XLA analogue of CUDA-Graph replay. Decode loops run under
-``lax.scan`` so the whole generation is ONE program when desired
-(``generate_scanned``), or step-by-step from Python for serving
-(``Engine.step``), where the per-step executable is cached by jit.
+executable, the XLA analogue of CUDA-Graph replay.
 
 Step primitives (shared by every engine AND the continuous-batching
 scheduler in core/scheduler.py):
@@ -21,28 +18,39 @@ scheduler in core/scheduler.py):
                     a prefilling slot by a prompt chunk — so admission
                     work interleaves with decoding (chunked prefill).
 
-Engines (thin wrappers over the primitives):
-- ``generate``            — batch top-p/greedy generation (Llama profile).
+Decoding strategies are NOT separate loops any more: they are
+``DecodingProfile`` specs (core/profiles.py) driven by ONE loop,
+:func:`run_profile` — prefill the profile's expanded streams, then replay
+the decode-step executable, letting the profile pick each stream's next
+token, an optional intra-group cache permutation (beam's Obs #4 KV
+reorder), and the finish condition. The public engines are thin wrappers
+that build the profile and preserve their historical signatures:
+
+- ``generate``            — ``SamplingProfile`` (Llama/Chameleon I-T).
                             ``tokens`` is always [B, max_new_tokens]: on
                             early EOS exit the tail is padded with
                             ``eos_id`` so callers can slice safely.
-- ``generate_beam``       — beam search with per-step KV reorder
-                            (Seamless profile, Obs #4).
-- ``generate_contrastive``— Chameleon T-I: conditional + unconditional
+- ``generate_beam``       — ``BeamProfile`` (Seamless, Obs #4): per-step
+                            KV reorder via the returned permutation,
+                            donated by default.
+- ``generate_contrastive``— ``ContrastiveProfile`` (Chameleon T-I): two
                             streams, 2 forwards/step (§2.1.2).
-- ``layerskip`` lives in core/layerskip.py and reuses this module's
-  prefill/commit plumbing.
+
+The same profile objects ride ``ServeRequest.profile`` through the
+continuous-batching scheduler, where a request becomes a *slot group* of
+``profile.n_streams`` pool slots — see core/scheduler.py. ``layerskip``
+lives in core/layerskip.py and reuses this module's prefill/commit
+plumbing directly.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import kv_cache, sampling
+from repro.core import kv_cache, profiles, sampling
 from repro.models.registry import Model
 
 
@@ -104,10 +112,64 @@ def mixed_step(model: Model, params, cache, tokens, t_new, lengths):
     return logits[:, 0], cache
 
 
-# Internal aliases kept for callers predating the public primitives.
-_prefill = prefill
-_decode_step = decode_step
+# --------------------------------------------------------------------------
+# the ONE profile-driven decode loop
+# --------------------------------------------------------------------------
 
+def run_profile(
+    model: Model,
+    params,
+    profile: profiles.DecodingProfile,
+    prompt_tokens: jnp.ndarray,  # [G, Tp] per-GROUP prompts (right-padded)
+    *,
+    prompt_lengths: Optional[jnp.ndarray] = None,
+    max_new_tokens: int = 32,
+    max_len: Optional[int] = None,
+    key: Optional[jax.Array] = None,
+    extra_inputs: Optional[Dict[str, jnp.ndarray]] = None,
+    reorder=None,
+) -> Dict[str, Any]:
+    """Drive one decoding profile batch-at-a-time: expand the G group
+    prompts to the [G * n_streams] stream layout, prefill once, then
+    replay the decode-step executable, with the profile choosing each
+    stream's next token, the optional cache permutation (applied via
+    ``reorder``, default the donated Obs #4 gather), and the finish
+    condition. Returns the profile's ``finalize`` output plus ``cache``
+    and ``n_steps`` (decode-loop iterations actually run)."""
+    g, tp = prompt_tokens.shape
+    if prompt_lengths is None:
+        prompt_lengths = jnp.full((g,), tp, jnp.int32)
+    if max_len is None:
+        max_len = tp + max_new_tokens + 1
+    key = key if key is not None else jax.random.PRNGKey(0)
+    reorder = reorder if reorder is not None else kv_cache.reorder_donated
+
+    toks_s, lens_s, extra_s = profile.expand_prompts(
+        prompt_tokens, prompt_lengths, extra_inputs
+    )
+    logits, cache = prefill(model, params, toks_s, lens_s, max_len, extra_s)
+    state = profile.init(g, max_new_tokens)
+    n_steps, halt, feed = 0, False, None
+    for i in range(max_new_tokens):
+        if i > 0:
+            if halt:
+                break
+            logits, cache = decode_step(model, params, cache, feed)
+        key, sub = jax.random.split(key)
+        out = profile.step(state, logits, sub)
+        state, feed = out.state, out.feed
+        if out.perm is not None:  # Obs #4: the KV_Cache_Reorder op
+            cache = reorder(cache, out.perm)
+        n_steps += 1
+        halt = out.done is not None and bool(out.done.all())
+    result = profile.finalize(state)
+    result.update(cache=cache, n_steps=n_steps)
+    return result
+
+
+# --------------------------------------------------------------------------
+# thin engine wrappers (historical signatures preserved)
+# --------------------------------------------------------------------------
 
 def generate(
     model: Model,
@@ -122,8 +184,8 @@ def generate(
     extra_inputs: Optional[Dict[str, jnp.ndarray]] = None,
     live: Optional[jnp.ndarray] = None,
 ) -> Dict[str, jnp.ndarray]:
-    """Python-loop generation (serving style): a thin wrapper over the
-    ``prefill`` / ``decode_step`` primitives replayed per step.
+    """Python-loop generation (serving style): a ``SamplingProfile`` run
+    through the one profile loop.
 
     ``live`` [B] marks which batch rows carry real requests; dead rows
     (fixed-slot padding) are treated as already finished: they emit only
@@ -134,48 +196,14 @@ def generate(
     Output contract: ``tokens`` is ALWAYS [B, max_new_tokens]. When every
     live row hits EOS early, the remaining columns are padded with the
     fill token (``n_steps`` reports the real decode-step count)."""
-    b, tp = prompt_tokens.shape
-    if prompt_lengths is None:
-        prompt_lengths = jnp.full((b,), tp, jnp.int32)
-    key = key if key is not None else jax.random.PRNGKey(0)
-    max_len = tp + max_new_tokens + 1
-
-    logits, cache = prefill(
-        model, params, prompt_tokens, prompt_lengths, max_len, extra_inputs
+    prof = profiles.SamplingProfile(eos_id=eos_id, sampler=sampler, live=live)
+    out = run_profile(
+        model, params, prof, prompt_tokens,
+        prompt_lengths=prompt_lengths, max_new_tokens=max_new_tokens,
+        key=key, extra_inputs=extra_inputs,
     )
-    key, sub = jax.random.split(key)
-    token = sampler(logits, sub)
-    # ``fill`` stands in for finished/dead rows: EOS when defined, else 0 —
-    # so the live mask masks garbage even without an EOS id.
-    fill = eos_id if eos_id is not None else 0
-    done = None
-    if eos_id is not None or live is not None:
-        done = jnp.zeros((b,), bool) if live is None else ~live
-        if eos_id is not None:
-            done = done | (token == eos_id)  # the FIRST token may stop a row
-        token = jnp.where(done, fill, token)  # dead rows emit only fill
-    out = [token]
-    for _ in range(max_new_tokens - 1):
-        if done is not None and bool(done.all()):
-            break
-        logits, cache = decode_step(model, params, cache, token)
-        key, sub = jax.random.split(key)
-        token = sampler(logits, sub)
-        if done is not None:
-            if eos_id is not None:
-                done = done | (token == eos_id)
-            token = jnp.where(done, fill, token)
-        out.append(token)
-    n_steps = len(out)
-    tokens = jnp.stack(out, axis=1)
-    if n_steps < max_new_tokens:  # early exit: pad, don't go ragged
-        pad = jnp.full((b, max_new_tokens - n_steps), fill, tokens.dtype)
-        tokens = jnp.concatenate([tokens, pad], axis=1)
-    return {
-        "tokens": tokens,
-        "cache": cache,
-        "n_steps": n_steps,
-    }
+    return {"tokens": out["tokens"], "cache": out["cache"],
+            "n_steps": out["n_steps"]}
 
 
 def generate_scanned(
@@ -189,7 +217,8 @@ def generate_scanned(
     extra_inputs: Optional[Dict[str, jnp.ndarray]] = None,
 ) -> jnp.ndarray:
     """Whole-generation-as-one-program variant: prefill + lax.scan decode.
-    This is the fully static pipeline the dry-run lowers for decode shapes."""
+    This is the fully static pipeline the dry-run lowers for decode shapes
+    (profiles' host-side control flow excludes them from this path)."""
     b, tp = prompt_tokens.shape
     prompt_lengths = jnp.full((b,), tp, jnp.int32)
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -211,60 +240,47 @@ def generate_scanned(
     return jnp.concatenate([token0[None], rest], axis=0).T  # [B, max_new]
 
 
-# --------------------------------------------------------------------------
-# Beam search (Seamless S-T/T-T profile)
-# --------------------------------------------------------------------------
-
 def generate_beam(
     model: Model,
     params,
     *,
-    batch: int,
+    batch: Optional[int] = None,
     n_beams: int,
-    bos_id: int,
+    bos_id: Optional[int] = None,
     eos_id: int,
     max_new_tokens: int,
+    prompt_tokens: Optional[jnp.ndarray] = None,  # [B, Tp]; default [bos]
+    prompt_lengths: Optional[jnp.ndarray] = None,
     extra_inputs: Optional[Dict[str, jnp.ndarray]] = None,
     length_penalty: float = 1.0,
     donate_reorder: bool = True,
 ) -> Dict[str, jnp.ndarray]:
-    """Beam search with per-step KV reorder. Inputs (e.g. encoder frames)
-    are tiled across beams; each step gathers the cache along the batch
-    axis by the surviving-parent permutation (paper Obs #4) — donated by
-    default (the optimized `copy_` form), or reallocating when
-    ``donate_reorder=False`` (the paper's baseline `index_select`)."""
-    bk = batch * n_beams
-    tiled_extra = None
-    if extra_inputs:
-        tiled_extra = {
-            k: jnp.repeat(v, n_beams, axis=0) for k, v in extra_inputs.items()
-        }
-    prompt = jnp.full((bk, 1), bos_id, jnp.int32)
-    lengths = jnp.ones((bk,), jnp.int32)
-    logits, cache = prefill(
-        model, params, prompt, lengths, max_new_tokens + 2, tiled_extra
+    """Beam search with per-step KV reorder, as a ``BeamProfile``. Inputs
+    (e.g. encoder frames) are tiled across beams; each step gathers the
+    cache along the batch axis by the surviving-parent permutation (paper
+    Obs #4) — donated by default (the optimized `copy_` form), or
+    reallocating when ``donate_reorder=False`` (the paper's baseline
+    `index_select`). ``prompt_tokens`` generalizes the historical
+    BOS-only prompt (every beam prefills the same prompt)."""
+    if prompt_tokens is None:
+        if batch is None or bos_id is None:
+            raise ValueError("need prompt_tokens, or batch + bos_id")
+        prompt_tokens = jnp.full((batch, 1), bos_id, jnp.int32)
+    prof = profiles.BeamProfile(
+        n_beams=n_beams, eos_id=eos_id, length_penalty=length_penalty
     )
+    out = run_profile(
+        model, params, prof, prompt_tokens,
+        prompt_lengths=prompt_lengths, max_new_tokens=max_new_tokens,
+        extra_inputs=extra_inputs,
+        reorder=(
+            kv_cache.reorder_donated if donate_reorder
+            else kv_cache.reorder_realloc
+        ),
+    )
+    return {"tokens": out["tokens"], "scores": out["scores"],
+            "n_steps": out["n_steps"]}
 
-    state = sampling.beam_init(batch, n_beams, max_new_tokens)
-    reorder = kv_cache.reorder_donated if donate_reorder else kv_cache.reorder_realloc
-    token = None
-    for step_i in range(max_new_tokens):
-        if step_i > 0:
-            logits, cache = decode_step(model, params, cache, token)
-        state, beam_idx = sampling.beam_step(
-            state, logits, n_beams, eos_id, length_penalty
-        )
-        cache = reorder(cache, beam_idx)  # Obs #4: the KV_Cache_Reorder op
-        token = state.tokens[:, step_i]
-        if bool(state.finished.all()):
-            break
-    tokens, scores = sampling.beam_finalize(state, n_beams, length_penalty)
-    return {"tokens": tokens, "scores": scores, "n_steps": state.step}
-
-
-# --------------------------------------------------------------------------
-# Contrastive decoding (Chameleon T-I profile, §2.1.2)
-# --------------------------------------------------------------------------
 
 def generate_contrastive(
     model: Model,
@@ -277,31 +293,26 @@ def generate_contrastive(
     sampler: sampling.Sampler = sampling.greedy,
     key: Optional[jax.Array] = None,
 ) -> Dict[str, jnp.ndarray]:
-    """Chameleon T-I: the conditional stream sees the prompt, the
-    unconditional stream a null prompt; each step runs BOTH (the paper's
-    "decodes twice at each time step"), combines logits contrastively, and
-    feeds the same sampled image token to both streams."""
-    from repro.models import vlm
-
+    """Chameleon T-I as a ``ContrastiveProfile``: the conditional stream
+    sees the prompt, the unconditional stream a null prompt; each step
+    runs BOTH (the paper's "decodes twice at each time step"), combines
+    logits contrastively, and feeds the same sampled image token to both
+    streams. On VLM configs sampling is restricted to the image-token
+    range; other families run plain classifier-free guidance."""
     cfg = model.config
-    b, tp = prompt_tokens.shape
-    key = key if key is not None else jax.random.PRNGKey(0)
-    # stack [cond; uncond] into one batch of 2B: 1 model, 2 streams
-    uncond = jnp.full((b, tp), uncond_token, jnp.int32)
-    both = jnp.concatenate([prompt_tokens, uncond], axis=0)
-    lengths = jnp.full((2 * b,), tp, jnp.int32)
-    logits, cache = prefill(
-        model, params, both, lengths, tp + n_image_tokens + 1, None
-    )
+    mask_offset = None
+    if getattr(cfg, "vlm", None) is not None:
+        from repro.models import vlm
 
-    tokens = []
-    for _ in range(n_image_tokens):
-        cond_l, uncond_l = logits[:b], logits[b:]
-        mixed = vlm.contrastive_logits(cond_l, uncond_l, guidance)
-        mixed = vlm.image_token_mask(cfg, mixed)
-        key, sub = jax.random.split(key)
-        token = sampler(mixed, sub)
-        tokens.append(token)
-        token2 = jnp.concatenate([token, token], axis=0)
-        logits, cache = decode_step(model, params, cache, token2)
-    return {"tokens": jnp.stack(tokens, axis=1), "n_steps": n_image_tokens}
+        mask_offset = vlm.image_token_offset(cfg)
+    prof = profiles.ContrastiveProfile(
+        uncond_token=uncond_token, guidance=guidance,
+        mask_offset=mask_offset, sampler=sampler,
+    )
+    tp = prompt_tokens.shape[1]
+    out = run_profile(
+        model, params, prof, prompt_tokens,
+        max_new_tokens=n_image_tokens, max_len=tp + n_image_tokens + 1,
+        key=key,
+    )
+    return {"tokens": out["tokens"], "n_steps": out["n_steps"]}

@@ -78,6 +78,30 @@ dense row:
   half-prefilled slot is indistinguishable from a short finished prompt
   to every validity mask; preempting it just frees its blocks and drops
   the cursor — replay restarts at chunk zero, token-identically.
+
+Decoding profiles in the pool
+-----------------------------
+Multi-stream decoding profiles (core/profiles.py: an n-beam group, a
+contrastive cond/uncond pair) occupy a *slot group* of ``n_streams``
+slots, and the block table turns their two expensive cache operations
+into index manipulation (vLLM's PagedAttention insight):
+
+- **common-prefix sharing**: every beam prefills the same prompt, so
+  admission prefills ONE stream and the others ``share`` its blocks —
+  block refcounts go up, zero device copies. The contiguous pool's
+  fallback is a ``write_slot`` row copy per extra stream.
+- **beam reorder as table permutation**: the paper's Obs #4
+  KV_Cache_Reorder — re-binding each beam to its surviving parent's
+  cache every step — becomes ``BlockPool.permute_group``: child tables
+  point at the parent's physical blocks (refcounted), and NO device KV
+  gather runs. ``reorder_donated`` below stays the contiguous pool's
+  (and the batch engines') fallback.
+- **copy-on-write**: a shared block must be unshared before anyone
+  writes into it. The next decode write only ever lands in the block
+  holding position ``kv_len``, so ``ensure_writable`` copies exactly
+  that block (``copy_block``, one block-sized donated device copy) for
+  all but the last owner; full common-prefix blocks stay shared for the
+  group's whole lifetime because writes never revisit them.
 """
 from __future__ import annotations
 
@@ -172,6 +196,27 @@ def append_block(pool_layers: Any, row_layers: Any, block: jnp.ndarray,
         )
 
     return jax.tree.map(copy, pool_layers, row_layers)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def copy_block(pool_layers: Any, src: jnp.ndarray, dst: jnp.ndarray) -> Any:
+    """Copy physical block ``src`` over physical block ``dst`` in every K/V
+    leaf ([num_blocks, block_size, ...]) — the copy-on-write unshare for a
+    block two slot-group streams would otherwise both write (see module
+    docstring: "Decoding profiles in the pool"). Donated, with ``src`` and
+    ``dst`` traced: ONE compiled executable serves every CoW copy, and the
+    pool's buffers are updated in place — no new KV device buffer is ever
+    allocated by a beam reorder."""
+
+    def copy(p: jnp.ndarray) -> jnp.ndarray:
+        blk = jax.lax.dynamic_slice(
+            p, (src,) + (0,) * (p.ndim - 1), (1,) + p.shape[1:]
+        )
+        return jax.lax.dynamic_update_slice(
+            p, blk, (dst,) + (0,) * (p.ndim - 1)
+        )
+
+    return jax.tree.map(copy, pool_layers)
 
 
 def free_blocks(pool: Any, mask: jnp.ndarray) -> Any:

@@ -138,7 +138,7 @@ def layerskip_generate(
     b, tp = prompt_tokens.shape
     max_len = tp + max_new_tokens + n_draft + 2
     prompt_lengths = jnp.full((b,), tp, jnp.int32)
-    logits, cache = E._prefill(
+    logits, cache = E.prefill(
         model, params, prompt_tokens, prompt_lengths, max_len, None
     )
     token = jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -68,18 +68,29 @@ def top_p(p: float = 0.9, temp: float = 1.0) -> Sampler:
 # Per-slot sampling (continuous-batching scheduler)
 # --------------------------------------------------------------------------
 
-def request_key(base_key: jax.Array, rid) -> jax.Array:
-    """Per-request RNG key: independent of slot placement and batch mates."""
-    return jax.random.fold_in(base_key, rid)
+def request_key(base_key: jax.Array, rid, stream=0) -> jax.Array:
+    """Per-(request, stream) RNG key: independent of slot placement and
+    batch mates. ``stream`` separates the streams of one multi-stream
+    request (an n-beam / contrastive slot group): folding in only ``rid``
+    would hand every stream of the group the SAME random stream."""
+    return jax.random.fold_in(jax.random.fold_in(base_key, rid), stream)
 
 
 @jax.jit
 def slot_step_keys(
-    base_key: jax.Array, rids: jnp.ndarray, steps: jnp.ndarray
+    base_key: jax.Array,
+    rids: jnp.ndarray,
+    steps: jnp.ndarray,
+    streams: Optional[jnp.ndarray] = None,
 ) -> jax.Array:
-    """Key per slot for its next token: fold (request id, token index) into
-    the serve-level base key. [B] rids, [B] steps -> [B] keys."""
+    """Key per slot for its next token: fold (request id, stream index,
+    token index) into the serve-level base key. [B] rids, [B] steps,
+    optional [B] streams (default all-0: single-stream requests) -> [B]
+    keys. Streams of one slot group share a rid but never a key."""
     req_keys = jax.vmap(lambda r: jax.random.fold_in(base_key, r))(rids)
+    if streams is None:
+        streams = jnp.zeros_like(rids)
+    req_keys = jax.vmap(jax.random.fold_in)(req_keys, streams)
     return jax.vmap(jax.random.fold_in)(req_keys, steps)
 
 

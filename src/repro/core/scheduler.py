@@ -51,21 +51,37 @@ higher = more urgent): the admission loop picks the highest-priority
 arrived request (stable FIFO within a class), and the preemption victim
 is always the youngest request of the LOWEST resident priority.
 
-Decoder-only families only (no per-request extra inputs; enc-dec serving
-goes through ``engine.generate_beam``).
+``ServeRequest.profile`` (core/profiles.py) generalizes WHAT a request
+decodes: a multi-stream ``DecodingProfile`` (beam, contrastive) is
+admitted as a *slot group* of ``profile.n_streams`` slots — acquired,
+evicted, and preempted all-or-nothing, with the group treated as ONE
+unit by priority ordering and victim selection. Group streams ride the
+same pool-wide decode executable as everyone else; between the decode
+step and the commit, the scheduler gathers each group's logits rows and
+lets its profile pick the streams' next tokens plus an optional
+intra-group cache permutation (beam's Obs #4 KV reorder). Under
+``paged=True`` that permutation is a pure host-side block-table rewrite
+with copy-on-write sharing of common-prefix blocks (``BlockPool.share``
+/ ``permute_group`` / ``ensure_writable``) — no device KV gather ever
+runs; the contiguous pool falls back to ``kv_cache.reorder_donated``.
+Per-request ``extra_inputs`` (encoder frames) ride the admission prefill
+into per-slot cross-attention cache rows, so enc-dec beam requests serve
+through the (contiguous) pool too. Preempting a group frees every slot
+and block it holds and replays it from scratch — token-identical, since
+profiles re-``init`` pure state and keys derive from (rid, stream, step).
 """
 from __future__ import annotations
 
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, sampling
+from repro.core import engine, kv_cache, profiles, sampling
 from repro.core.prefill import ChunkCursor, ChunkedPrefill
 from repro.core.slot_pool import BlockPool, SlotPool
 from repro.models.registry import Model
@@ -83,9 +99,21 @@ class ServeRequest:
     t_arrival: float = 0.0
     temperature: float = 0.0  # 0 => greedy
     top_p: float = 1.0
+    # per-request EOS override; None = the scheduler-level eos_id (set
+    # automatically from a single-stream SamplingProfile's eos_id)
+    eos_id: Optional[int] = None
     priority: int = 0  # higher = more urgent (admission + preemption)
+    # HOW to decode: None = plain per-slot sampling (temperature/top_p
+    # above); a multi-stream DecodingProfile (beam/contrastive) makes this
+    # request a slot GROUP of profile.n_streams slots
+    profile: Optional[profiles.DecodingProfile] = None
+    # per-request prefill inputs beyond the prompt (e.g. encoder frames
+    # [1, F, d] + frame_lengths [1]) — written into the slot's own
+    # cross-attention cache rows at admission
+    extra_inputs: Optional[Dict[str, np.ndarray]] = None
     # ---- filled in by the scheduler ----
     tokens: List[int] = field(default_factory=list)
+    score: Optional[float] = None  # beam: best hypothesis' normalized score
     t_admit: Optional[float] = None
     t_first: Optional[float] = None  # first token (TTFT reference)
     t_done: Optional[float] = None
@@ -135,6 +163,24 @@ class SlotState:
         return (eos_id is not None and token == eos_id) or (
             self.n_generated >= self.req.max_new
         )
+
+
+@dataclass
+class GroupState:
+    """Host-side view of one occupied slot GROUP (a multi-stream decoding
+    profile): stream ``i`` lives in pool slot ``slots[i]``. Streams advance
+    in lockstep, so one ``kv_len`` covers the whole group; all mutable
+    decoding state is ``pstate`` (the profile's, re-initialized on
+    preemption replay). ``admit_seq`` orders the group as ONE unit against
+    other residents for block growth and victim selection."""
+
+    req: ServeRequest
+    slots: List[int]
+    profile: profiles.DecodingProfile
+    pstate: Any
+    n_generated: int = 0
+    kv_len: int = 0
+    admit_seq: int = 0
 
 
 class Scheduler:
@@ -195,12 +241,16 @@ class Scheduler:
             budget = prefill_budget if prefill_budget is not None else block_size
             self.chunk_mgr = ChunkedPrefill(slots, budget)
         self.active: Dict[int, SlotState] = {}
+        # slot groups (multi-stream profiles), keyed by their first slot
+        self.groups: Dict[int, GroupState] = {}
         self.waiting: Deque[ServeRequest] = deque()
         self.finished: List[ServeRequest] = []
         # host mirrors of per-slot decode state (free slots: greedy + rid 0;
-        # their sampled tokens are discarded)
+        # their sampled tokens are discarded; group slots also decode greedy
+        # garbage here — their REAL tokens come from the profile's step)
         self._token = np.zeros((slots,), np.int32)
         self._rid = np.zeros((slots,), np.int32)
+        self._stream = np.zeros((slots,), np.int32)  # stream idx in a group
         self._ngen = np.zeros((slots,), np.int32)
         self._temp = np.zeros((slots,), np.float32)
         self._top_p = np.ones((slots,), np.float32)
@@ -211,6 +261,11 @@ class Scheduler:
         self.n_mixed_steps = 0  # steps that carried at least one chunk
         self.n_chunks = 0
         self.n_chunk_tokens = 0
+        self.n_group_admissions = 0
+        # cache-permutation accounting: device gathers (contiguous beam
+        # fallback) vs pure host-side block-table permutations (paged beam)
+        self.n_cache_reorders = 0
+        self.n_block_permutes = 0
         # decode-stall-per-admission, measured DIRECTLY: when a request is
         # admitted while residents are decoding, the stall is the interval
         # from the previous step's commit to the next step's commit — the
@@ -235,6 +290,33 @@ class Scheduler:
         # first (stable — submission order breaks remaining ties)
         for r in sorted(requests, key=lambda r: (r.t_arrival, -r.priority)):
             r.max_new = min(r.max_new, self.max_new_cap)
+            s_n = profiles.n_streams_of(r.profile)
+            if s_n > self.slots:
+                raise ValueError(
+                    f"request {r.rid} needs a slot group of {s_n} streams "
+                    f"but the pool has only {self.slots} slots"
+                )
+            if self.paged and s_n * self.pool.max_blocks > self.pool.num_blocks - 1:
+                # the preemption ladder's termination guarantee: the oldest
+                # resident must always be able to run ALONE, worst case
+                raise ValueError(
+                    f"request {r.rid}: a {s_n}-stream group can need up to "
+                    f"{s_n * self.pool.max_blocks} blocks but the pool has "
+                    f"{self.pool.num_blocks - 1} usable"
+                )
+            if s_n == 1 and isinstance(r.profile, profiles.SamplingProfile):
+                # single-stream profiles collapse onto the vectorized
+                # per-slot sampling path (same numerics, no group machinery)
+                if r.profile.sampler is not None:
+                    raise ValueError(
+                        "SamplingProfile.sampler callables are a batch-"
+                        "engine escape hatch; the pool serves the "
+                        "(temperature, top_p, eos_id) spec"
+                    )
+                r.temperature = r.profile.temperature
+                r.top_p = r.profile.top_p
+                if r.profile.eos_id is not None:
+                    r.eos_id = r.profile.eos_id
             self.waiting.append(r)
 
     # ---- admission -------------------------------------------------------
@@ -249,12 +331,26 @@ class Scheduler:
         buf[0, : len(p)] = p
         return jnp.asarray(buf), jnp.asarray([len(p)], jnp.int32)
 
+    def _eos(self, req: ServeRequest) -> Optional[int]:
+        """The EOS id governing one request: its own override (a
+        single-stream SamplingProfile's eos_id) or the scheduler-wide
+        default."""
+        return req.eos_id if req.eos_id is not None else self.eos_id
+
     def _mark_admission_stall(self) -> None:
         """Residents are mid-decode: whatever admission work happens now
         widens their current inter-token gap. Remember the gap's start (the
         last step's commit time); the next step's commit closes it."""
-        if self.active and self._last_commit_t is not None:
+        if (self.active or self.groups) and self._last_commit_t is not None:
             self._stall_marks.append(self._last_commit_t)
+
+    def _request_extra(self, req: ServeRequest):
+        """Per-request prefill extras (encoder frames etc.) as device
+        arrays; their pytree structure is part of the compiled prefill
+        signature, so one executable serves every request of a family."""
+        if not req.extra_inputs:
+            return None
+        return {k: jnp.asarray(v) for k, v in req.extra_inputs.items()}
 
     def _admit_one(self, req: ServeRequest, now: float) -> None:
         self._mark_admission_stall()
@@ -263,7 +359,8 @@ class Scheduler:
         tokens, length = self._pad_prompt(req.prompt)
         n_prompt = int(length[0])
         logits, row = engine.prefill(
-            self.model, self.params, tokens, length, self.max_len, None
+            self.model, self.params, tokens, length, self.max_len,
+            self._request_extra(req),
         )
         self.pool.assign(slot, row, n_prompt)
         if self.paged:
@@ -295,7 +392,7 @@ class Scheduler:
             admit_seq=self._seq,
         )
         self._seq += 1
-        if state.finished(first, self.eos_id):
+        if state.finished(first, self._eos(req)):
             req.t_done = req.t_first
             self.finished.append(req)
             self.pool.evict(slot)
@@ -303,6 +400,7 @@ class Scheduler:
         self.active[slot] = state
         self._token[slot] = first
         self._rid[slot] = req.rid
+        self._stream[slot] = 0  # a group may have left a stale stream index
         self._ngen[slot] = 1
         self._temp[slot] = req.temperature
         self._top_p[slot] = req.top_p
@@ -321,28 +419,97 @@ class Scheduler:
         self.chunk_mgr.add(cursor)
         req.t_admit = now
         # pre-stage the slot's sampling state so the step that completes
-        # the prefill samples the first token with the (rid, 0) key in the
-        # same vectorized call as everyone else's decode tokens
+        # the prefill samples the first token with the (rid, stream 0, 0)
+        # key in the same vectorized call as everyone else's decode tokens
         self._rid[slot] = req.rid
+        self._stream[slot] = 0  # a group may have left a stale stream index
         self._ngen[slot] = 0
         self._temp[slot] = req.temperature
         self._top_p[slot] = req.top_p
 
+    def _admit_one_group(self, req: ServeRequest, now: float) -> None:
+        """Slot-group admission (multi-stream profile): acquire
+        ``n_streams`` slots all-or-nothing, prefill the profile's stream
+        prompts, and run the profile's FIRST step on the prefill logits.
+        Prefix-shared profiles (beam: every stream prefills the same
+        prompt) run ONE prefill; on the paged pool the other streams then
+        ``share`` its blocks copy-on-write — zero extra device copies —
+        while the contiguous pool re-scatters the row per stream."""
+        prof = req.profile
+        s_n = prof.n_streams
+        self._mark_admission_stall()
+        slots = [self.pool.acquire() for _ in range(s_n)]
+        assert all(s is not None for s in slots)
+        prompts = prof.stream_prompts(self._trim_prompt(req.prompt))
+        n_lens = {len(p) for p in prompts}
+        assert len(n_lens) == 1, "group streams must share one prompt length"
+        n_prompt = n_lens.pop()
+        extra = self._request_extra(req)
+        if prof.prefix_shared:
+            tokens, length = self._pad_prompt(prompts[0])
+            logits, row = engine.prefill(
+                self.model, self.params, tokens, length, self.max_len, extra
+            )
+            self.n_prefills += 1
+            self.pool.assign(slots[0], row, n_prompt)
+            for s in slots[1:]:
+                if self.paged:
+                    self.pool.share(s, slots[0])
+                else:
+                    self.pool.assign(s, row, n_prompt)
+            logit_rows = jnp.repeat(logits, s_n, axis=0)  # identical streams
+        else:
+            rows = []
+            for s, p in zip(slots, prompts):
+                tokens, length = self._pad_prompt(p)
+                logits, row = engine.prefill(
+                    self.model, self.params, tokens, length, self.max_len,
+                    extra,
+                )
+                self.n_prefills += 1
+                self.pool.assign(s, row, n_prompt)
+                rows.append(logits)
+            logit_rows = jnp.concatenate(rows, axis=0)
+        req.t_admit = now
+        g = GroupState(
+            req=req, slots=slots, profile=prof,
+            pstate=prof.init(1, req.max_new), kv_len=n_prompt,
+            admit_seq=self._seq,
+        )
+        self._seq += 1
+        self.n_group_admissions += 1
+        for i, s in enumerate(slots):
+            self._rid[s] = req.rid
+            self._stream[s] = i
+            self._ngen[s] = 0
+            self._temp[s] = 0.0  # group sampling lives in the profile
+        if not self._advance_group(g, logit_rows, self._now()):
+            self.groups[g.slots[0]] = g
+
     def _admissible(self, req: ServeRequest) -> bool:
-        """Pool-side admission gate. Contiguous: a free slot. Paged: a free
-        slot AND enough free blocks for the prompt plus a one-block
-        watermark (optimistic vLLM-style admission — later growth is served
-        on demand and backed by preemption, not reserved up front).
-        Chunked: blocks are claimed chunk by chunk, so admission only needs
-        the FIRST chunk's block (+ watermark when the pool is busy)."""
-        if self.pool.n_free == 0:
+        """Pool-side admission gate. Contiguous: ``n_streams`` free slots.
+        Paged: the slots AND enough free blocks for the streams' prompts
+        plus a one-block watermark (optimistic vLLM-style admission — later
+        growth is served on demand and backed by preemption, not reserved
+        up front). A prefix-shared group's streams SHARE the prompt blocks,
+        so it only needs them once plus ``n_streams - 1`` copy-on-write
+        spares for the write-cursor block. Chunked (single-stream only):
+        blocks are claimed chunk by chunk, so admission only needs the
+        FIRST chunk's block (+ watermark when the pool is busy)."""
+        s_n = profiles.n_streams_of(req.profile)
+        if self.pool.n_free < s_n:
             return False
         if not self.paged:
             return True
-        if self.chunked:
+        n_prompt = max(1, min(len(req.prompt), self.pad_to))
+        if s_n > 1:
+            if req.profile.prefix_shared:
+                need = self.pool.blocks_for(n_prompt) + (s_n - 1)
+            else:
+                need = self.pool.blocks_for(n_prompt) * s_n
+        elif self.chunked:
             need = 1
         else:
-            n_prompt = max(1, min(len(req.prompt), self.pad_to))
             need = self.pool.blocks_for(n_prompt)
         if self.pool.n_active == 0:
             # idle pool: every block is free and one worst-case request is
@@ -365,14 +532,18 @@ class Scheduler:
         return best_i, best
 
     def _admit(self, now: float) -> None:
-        if self.policy == "fixed" and self.active:
+        if self.policy == "fixed" and (self.active or self.groups):
             return  # run-to-completion: no refill until the pool drains
         while True:
             i, cand = self._next_candidate(now)
             if cand is None or not self._admissible(cand):
                 return
             del self.waiting[i]
-            if self.chunked:
+            if profiles.n_streams_of(cand.profile) > 1:
+                self._admit_one_group(cand, now)
+            elif self.chunked and not cand.extra_inputs:
+                # extra-input requests need the prefill program (the chunk
+                # path streams tokens only), so they take the dense path
                 self._admit_one_chunked(cand, now)
             else:
                 self._admit_one(cand, now)
@@ -380,53 +551,85 @@ class Scheduler:
     # ---- paged back-pressure ---------------------------------------------
     def _victim(self):
         """Preemption victim: the YOUNGEST request of the LOWEST priority
-        among all residents — decoding slots AND half-prefilled chunk
-        cursors alike (a cursor is the cheapest victim: no tokens to
-        recompute, only chunks to replay)."""
-        cands: list = list(self.active.values())
+        among all residents — decoding slots, half-prefilled chunk cursors
+        (the cheapest victim: no tokens to recompute, only chunks to
+        replay), and whole slot GROUPS alike (a group is one unit: its
+        admit_seq/priority rank it, and preemption takes every stream)."""
+        cands: list = list(self.active.values()) + list(self.groups.values())
         if self.chunk_mgr is not None:
             cands += list(self.chunk_mgr.cursors.values())
         return min(cands, key=lambda s: (s.req.priority, -s.admit_seq))
 
     def _preempt(self, st) -> None:
-        """Out-of-blocks back-pressure: evict the slot, free its blocks,
+        """Out-of-blocks back-pressure: evict the slot(s), free the blocks,
         and requeue the request at the FRONT of the waiting queue for full
-        recompute. Greedy decoding / per-(rid, step) sampling keys replay
-        the identical token stream, so preemption costs work, not tokens.
-        ``st`` is a SlotState (decoding) or a ChunkCursor (mid-prefill —
-        the cursor is dropped and re-admission restarts at chunk zero)."""
-        if isinstance(st, ChunkCursor):
-            self.chunk_mgr.remove(st.slot)
+        recompute. Greedy decoding / per-(rid, stream, step) keys / pure
+        profile ``init`` state replay the identical token stream, so
+        preemption costs work, not tokens. ``st`` is a SlotState
+        (decoding), a ChunkCursor (mid-prefill — the cursor is dropped and
+        re-admission restarts at chunk zero), or a GroupState (every
+        stream's slot is evicted and the profile state discarded)."""
+        if isinstance(st, GroupState):
+            del self.groups[st.slots[0]]
+            for s in st.slots:
+                self.pool.evict(s)
+                self._temp[s] = 0.0
         else:
-            del self.active[st.slot]
-        self.pool.evict(st.slot)
-        self._temp[st.slot] = 0.0
+            if isinstance(st, ChunkCursor):
+                self.chunk_mgr.remove(st.slot)
+            else:
+                del self.active[st.slot]
+            self.pool.evict(st.slot)
+            self._temp[st.slot] = 0.0
         st.req.tokens = []
         st.req.t_tokens = []
+        st.req.score = None
         self.waiting.appendleft(st.req)
         self.n_preemptions += 1
 
     def _ensure_blocks(self) -> None:
         """Before a paged decode step every active slot must own the block
-        its next token writes into. Slots grow oldest-first; when the pool
+        its next token writes into — EXCLUSIVELY, for group streams whose
+        write-cursor block may be shared (copy-on-write unshare via
+        ``ensure_writable``). Residents grow oldest-first; when the pool
         runs dry the youngest lowest-priority resident is preempted
         (repeatedly if needed). Terminates: BlockPool guarantees one
-        worst-case request fits, so the oldest slot can always run alone."""
-        for slot, st in sorted(self.active.items(), key=lambda kv: kv[1].admit_seq):
-            if slot not in self.active:
-                continue  # already preempted while growing an older slot
-            while not self.pool.ensure(slot, st.kv_len):
-                victim = self._victim()
-                self._preempt(victim)
-                if victim is st:
-                    break  # this slot WAS the victim; it queues
+        worst-case single request fits, and ``submit`` enforces the same
+        for whole groups, so the oldest resident can always run alone."""
+        ents = sorted(
+            list(self.active.values()) + list(self.groups.values()),
+            key=lambda st: st.admit_seq,
+        )
+        for ent in ents:
+            if isinstance(ent, GroupState):
+                if ent.slots[0] not in self.groups:
+                    continue  # already preempted while growing an older one
+                gone = False
+                for s in ent.slots:
+                    while not self.pool.ensure_writable(s, ent.kv_len):
+                        victim = self._victim()
+                        self._preempt(victim)
+                        if victim is ent:
+                            gone = True
+                            break
+                    if gone:
+                        break
+            else:
+                if ent.slot not in self.active:
+                    continue  # already preempted while growing an older one
+                while not self.pool.ensure(ent.slot, ent.kv_len):
+                    victim = self._victim()
+                    self._preempt(victim)
+                    if victim is ent:
+                        break  # this slot WAS the victim; it queues
 
     # ---- decode ----------------------------------------------------------
     def _sample(self, logits) -> np.ndarray:
         if not self._temp.any():  # all-greedy pool: skip the top-p pipeline
             return np.asarray(sampling.greedy(logits))
         keys = sampling.slot_step_keys(
-            self.base_key, jnp.asarray(self._rid), jnp.asarray(self._ngen)
+            self.base_key, jnp.asarray(self._rid), jnp.asarray(self._ngen),
+            jnp.asarray(self._stream),
         )
         return np.asarray(
             sampling.sample_slots(
@@ -463,7 +666,7 @@ class Scheduler:
             st.kv_len += 1  # this step wrote the slot's K/V at kv_len
             self._token[slot] = token
             self._ngen[slot] = st.n_generated
-            if st.finished(token, self.eos_id):
+            if st.finished(token, self._eos(st.req)):
                 st.req.t_done = now
                 self.finished.append(st.req)
                 done.append(st.req)
@@ -483,8 +686,8 @@ class Scheduler:
     def _step_decode(self) -> List[ServeRequest]:
         if self.paged:
             self._ensure_blocks()
-            if not self.active:  # everything preempted back to the queue
-                return []
+            if not self.active and not self.groups:
+                return []  # everything preempted back to the queue
         self.pool.sync()
         logits, cache = engine.decode_step(
             self.model, self.params, self.pool.cache, jnp.asarray(self._token)
@@ -492,7 +695,10 @@ class Scheduler:
         self.pool.cache = cache
         toks = self._sample(logits)
         self._record_step_metrics()
-        return self._commit_decode(toks, self._now())
+        now = self._now()
+        done = self._commit_decode(toks, now)
+        done += self._commit_groups(logits, now)
+        return done
 
     def _step_mixed(self) -> List[ServeRequest]:
         """One token-budget mixed step: decode tokens for every live slot
@@ -503,9 +709,12 @@ class Scheduler:
         # pack, then back every chunk's span with blocks; a starved cursor
         # is excluded and the plan rebuilt so its budget share flows to
         # cursors whose chunks ARE backed (no budget hoarding)
+        decode_slots = list(self.active) + [
+            s for g in self.groups.values() for s in g.slots
+        ]
         starved: set = set()
         while True:
-            plan = self.chunk_mgr.plan(self._token, list(self.active),
+            plan = self.chunk_mgr.plan(self._token, decode_slots,
                                        skip=starved)
             kept = list(plan.chunks)
             newly = [ch.slot for ch in plan.chunks
@@ -514,7 +723,7 @@ class Scheduler:
                 break
             starved.update(newly)
         if not kept:
-            if self.active:
+            if self.active or self.groups:
                 # every pending chunk is block-starved: run the cheap
                 # 1-lane decode executable, not a C-lane mixed step that
                 # would carry zero prefill tokens
@@ -535,6 +744,9 @@ class Scheduler:
         base = np.zeros((self.slots,), np.int32)
         for slot, st in self.active.items():
             base[slot] = st.kv_len
+        for g in self.groups.values():
+            for s in g.slots:
+                base[s] = g.kv_len
         for slot, cur in self.chunk_mgr.cursors.items():
             base[slot] = cur.pos
         self.pool.sync()
@@ -549,6 +761,7 @@ class Scheduler:
         self.n_mixed_steps += 1
         now = self._now()
         done = self._commit_decode(toks, now)
+        done += self._commit_groups(logits, now)
         for ch in kept:
             cur = self.chunk_mgr.advance(ch)
             self.n_chunks += 1
@@ -570,7 +783,7 @@ class Scheduler:
             req=req, slot=cur.slot, n_generated=1, kv_len=cur.n_prompt,
             admit_seq=cur.admit_seq,
         )
-        if state.finished(first, self.eos_id):
+        if state.finished(first, self._eos(req)):
             req.t_done = now
             self.finished.append(req)
             self.pool.evict(cur.slot)
@@ -580,6 +793,85 @@ class Scheduler:
         self._token[cur.slot] = first
         self._ngen[cur.slot] = 1
 
+    # ---- slot groups (multi-stream decoding profiles) ---------------------
+    def _advance_group(self, g: GroupState, logit_rows, now: float) -> bool:
+        """One profile step for one slot group: the profile consumes the
+        group's [n_streams, V] logits rows, picks every stream's next feed
+        token and the optional intra-group cache permutation, and reports
+        the finish condition. The step key derives from (rid, stream 0,
+        token index) so preemption replay is key-identical regardless of
+        slot placement or batch mates. Returns True when the group
+        finished (its slots are already evicted)."""
+        key = jax.random.fold_in(
+            sampling.request_key(self.base_key, g.req.rid), g.n_generated
+        )
+        out = g.profile.step(g.pstate, logit_rows, key)
+        g.pstate = out.state
+        if out.perm is not None:
+            self._apply_group_perm(g, np.asarray(out.perm))
+        g.n_generated += 1
+        if g.n_generated == 1:
+            g.req.t_first = now
+        g.req.t_tokens.append(now)
+        feed = np.asarray(out.feed)
+        for i, s in enumerate(g.slots):
+            self._token[s] = int(feed[i])
+            self._ngen[s] = g.n_generated
+        finished = out.done is not None and bool(np.asarray(out.done).all())
+        if finished or g.n_generated >= g.req.max_new:
+            self._finish_group(g, now)
+            return True
+        return False
+
+    def _apply_group_perm(self, g: GroupState, perm: np.ndarray) -> None:
+        """Re-bind each stream's cache to its surviving parent's (beam's
+        Obs #4 reorder). Paged: a pure host-side block-table permutation
+        with refcounted common-prefix sharing — NO device KV gather or
+        copy (the write-cursor block is unshared copy-on-write by the next
+        ``_ensure_blocks``). Contiguous fallback: one donated pool-wide
+        row gather (``kv_cache.reorder_donated``), identity outside the
+        group's slots."""
+        if np.array_equal(perm, np.arange(len(g.slots))):
+            return  # every stream kept its own cache
+        if self.paged:
+            self.pool.permute_group(g.slots, perm)
+            self.n_block_permutes += 1
+        else:
+            full = np.arange(self.slots)
+            sl = np.asarray(g.slots)
+            full[sl] = sl[perm]
+            self.pool.cache = kv_cache.reorder_donated(
+                self.pool.cache, jnp.asarray(full)
+            )
+            self.n_cache_reorders += 1
+
+    def _commit_groups(self, logits, now: float) -> List[ServeRequest]:
+        """Advance every resident group on the pool-wide step's logits
+        (each group's rows gathered by its slots). Runs AFTER the device
+        step wrote each stream's K/V at kv_len, hence the increment."""
+        done: List[ServeRequest] = []
+        for g in list(self.groups.values()):
+            rows = logits[jnp.asarray(np.asarray(g.slots, np.int32))]
+            g.kv_len += 1
+            if self._advance_group(g, rows, now):
+                done.append(g.req)
+        return done
+
+    def _finish_group(self, g: GroupState, now: float) -> None:
+        """Collapse the profile state into the request's output (beam:
+        best hypothesis + normalized score) and free every stream slot."""
+        fin = g.profile.finalize(g.pstate)
+        toks = np.asarray(fin["tokens"])[0]
+        g.req.tokens = [int(t) for t in toks[: g.n_generated]]
+        if "scores" in fin:
+            g.req.score = float(np.asarray(fin["scores"])[0])
+        g.req.t_done = now
+        self.finished.append(g.req)
+        self.groups.pop(g.slots[0], None)
+        for s in g.slots:
+            self.pool.evict(s)
+            self._temp[s] = 0.0
+
     # ---- driver ----------------------------------------------------------
     def run(self, requests: List[ServeRequest]) -> List[ServeRequest]:
         """Serve ``requests`` to completion; returns them in finish order.
@@ -587,11 +879,11 @@ class Scheduler:
         invisible to admission until ``t0 + t_arrival``."""
         self.submit(requests)
         self._t0 = self.clock()
-        while self.waiting or self.active or (
+        while self.waiting or self.active or self.groups or (
             self.chunk_mgr is not None and len(self.chunk_mgr)
         ):
             self._admit(self._now())
-            if not self.active and not (
+            if not self.active and not self.groups and not (
                 self.chunk_mgr is not None and len(self.chunk_mgr)
             ):
                 if self.waiting:  # pool idle, next request not arrived yet

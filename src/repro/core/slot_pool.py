@@ -121,18 +121,28 @@ class BlockPool(_PoolBase):
     Storage is ONE static ``[num_blocks, block_size, ...]`` K/V allocation
     per layer; a slot's logical positions map to physical blocks through
     its row of the host block table (shipped to the device by ``sync``).
-    Invariants (locked down by tests/test_paged.py):
+    Blocks are REFCOUNTED so slot-group decoding profiles (beam groups)
+    can share common-prefix blocks and permute ownership without device
+    copies — see core/kv_cache.py ("Decoding profiles in the pool").
+    Invariants (locked down by tests/test_paged.py + tests/test_profiles.py):
 
     - physical block 0 is the reserved garbage sink: never on the
       free-list, never in a live slot's table; freed slots' zeroed table
       rows route their pool-wide decode writes into it;
-    - every block in 1..num_blocks-1 is either on the block free-list or
-      owned by exactly one slot (no double allocation);
-    - ``evict`` returns every owned block to the free-list;
+    - every block in 1..num_blocks-1 is either on the block free-list
+      (refcount 0) or owned by >= 1 slots, its refcount equal to the
+      number of owning slots (without ``share``/``permute_group`` this
+      degenerates to the old exactly-one-owner rule);
+    - a block is only ever WRITTEN while its refcount is 1: the write
+      cursor's block is unshared copy-on-write by ``ensure_writable``,
+      and fully-written shared prefix blocks are never revisited;
+    - ``evict`` drops one reference per owned block; a block returns to
+      the free-list when its last owner lets go;
     - both free-lists are min-heaps: acquire order stays lowest-first;
-    - ``num_blocks - 1 >= max_blocks`` so one worst-case request always
-      fits — the scheduler's preemption ladder terminates because the
-      oldest request can always run alone.
+    - ``num_blocks - 1 >= max_blocks`` so one worst-case single-stream
+      request always fits — the scheduler's preemption ladder terminates
+      because the oldest request can always run alone (for an S-stream
+      group the scheduler enforces ``S * max_blocks`` at submit).
     """
 
     def __init__(
@@ -152,6 +162,13 @@ class BlockPool(_PoolBase):
             raise NotImplementedError("paged pool unsupported on ring/window caches")
         if getattr(cfg, "scan_layers", False):
             raise NotImplementedError("paged pool unsupported with scan_layers")
+        if getattr(cfg, "encdec", None) is not None:
+            # enc-dec caches carry per-SLOT cross-attention rows (encoder
+            # frames), which have no block-granular layout; enc-dec profiles
+            # serve through the contiguous SlotPool instead
+            raise NotImplementedError(
+                "paged pool unsupported for enc-dec cross-attention caches"
+            )
         self.model = model
         self.max_len = max_len
         self.block_size = block_size
@@ -174,7 +191,9 @@ class BlockPool(_PoolBase):
 
         self._free_blocks: List[int] = list(range(1, num_blocks))  # heap; 0=sink
         self._owned: List[List[int]] = [[] for _ in range(slots)]
+        self._ref = np.zeros((num_blocks,), np.int32)  # owners per block
         self._bt_dirty = False
+        self.n_cow_copies = 0  # copy-on-write unshares (device block copies)
 
     # ---- block accounting ------------------------------------------------
     @property
@@ -210,6 +229,7 @@ class BlockPool(_PoolBase):
         assert not self._owned[slot], "assign into a slot that still owns blocks"
         for j in range(need):
             phys = heapq.heappop(self._free_blocks)
+            self._ref[phys] = 1
             self._owned[slot].append(phys)
             self.block_tables[slot, j] = phys
             self.cache["layers"] = kv_cache.append_block(
@@ -232,18 +252,90 @@ class BlockPool(_PoolBase):
             if not self._free_blocks:
                 return False
             phys = heapq.heappop(self._free_blocks)
+            self._ref[phys] = 1
             j = len(self._owned[slot])
             self._owned[slot].append(phys)
             self.block_tables[slot, j] = phys
             self._bt_dirty = True
         return True
 
+    def ensure_writable(self, slot: int, kv_len: int) -> bool:
+        """``ensure`` plus copy-on-write: the block the next write lands in
+        (logical position ``kv_len``) must be EXCLUSIVELY owned before the
+        pool-wide step scatters into it, or a sibling stream sharing it
+        would see the write. All but the last owner get a fresh block and
+        one block-sized donated device copy (``kv_cache.copy_block``); the
+        shared prefix blocks BEFORE the write cursor stay shared. Returns
+        False when out of blocks (caller applies back-pressure)."""
+        if not self.ensure(slot, kv_len):
+            return False
+        j = kv_len // self.block_size
+        phys = int(self._owned[slot][j])
+        if self._ref[phys] <= 1:
+            return True
+        if not self._free_blocks:
+            return False
+        fresh = heapq.heappop(self._free_blocks)
+        self._ref[fresh] = 1
+        self._ref[phys] -= 1
+        self._owned[slot][j] = fresh
+        self.block_tables[slot, j] = fresh
+        self._bt_dirty = True
+        self.cache["layers"] = kv_cache.copy_block(
+            self.cache["layers"], jnp.int32(phys), jnp.int32(fresh)
+        )
+        self.n_cow_copies += 1
+        return True
+
+    def share(self, dst: int, src: int) -> None:
+        """Admit ``dst`` as a copy-free clone of ``src``: same block table,
+        every shared block's refcount bumped (common-prefix sharing for
+        prefix-shared slot groups — beams prefill once). ``dst`` must not
+        own blocks; the device length counter is copied too."""
+        assert not self._owned[dst], "share into a slot that still owns blocks"
+        self._owned[dst] = list(self._owned[src])
+        for phys in self._owned[dst]:
+            self._ref[phys] += 1
+        self.block_tables[dst, :] = self.block_tables[src, :]
+        self._bt_dirty = True
+        self.cache = kv_cache.set_slot_length(
+            self.cache, jnp.int32(dst), self.cache["lengths"][src]
+        )
+
+    def permute_group(self, slots: List[int], parent: np.ndarray) -> None:
+        """Beam reorder as pure host-side index manipulation: stream ``i``
+        of the group (pool slot ``slots[i]``) continues from stream
+        ``parent[i]``'s cache. Children share the parent's physical blocks
+        (refcounts up), orphaned blocks return to the free-list — NO device
+        KV gather or copy runs here; the next write's block is unshared
+        lazily by ``ensure_writable``."""
+        old = [self._owned[s] for s in slots]
+        # references first: a block both dropped and re-adopted must never
+        # transit through the free-list
+        for i in range(len(slots)):
+            for phys in old[int(parent[i])]:
+                self._ref[phys] += 1
+        for blks in old:
+            for phys in blks:
+                self._ref[phys] -= 1
+                if self._ref[phys] == 0:
+                    heapq.heappush(self._free_blocks, phys)
+        for i, s in enumerate(slots):
+            src = old[int(parent[i])]
+            self._owned[s] = list(src)
+            self.block_tables[s, :] = 0
+            self.block_tables[s, : len(src)] = src
+        self._bt_dirty = True
+
     def evict(self, slot: int) -> None:
-        """Finish (or preempt) a slot: all its blocks go back to the block
-        free-list, its table row is zeroed (future garbage writes hit the
-        sink block), and its length counter is zeroed on device."""
+        """Finish (or preempt) a slot: one reference dropped per owned
+        block (a block returns to the free-list when its LAST owner lets
+        go), the table row is zeroed (future garbage writes hit the sink
+        block), and the length counter is zeroed on device."""
         for phys in self._owned[slot]:
-            heapq.heappush(self._free_blocks, phys)
+            self._ref[phys] -= 1
+            if self._ref[phys] == 0:
+                heapq.heappush(self._free_blocks, phys)
         self._owned[slot] = []
         self.block_tables[slot, :] = 0
         self._bt_dirty = True
@@ -264,6 +356,7 @@ class BlockPool(_PoolBase):
         self.block_tables[:, :] = 0
         self._free = list(range(self.slots))
         self._free_blocks = list(range(1, self.num_blocks))
+        self._ref[:] = 0
         self._bt_dirty = True
         self.cache = kv_cache.free_blocks(
             self.cache, jnp.ones((self.slots,), bool)

@@ -16,6 +16,12 @@ only reserves ``num_blocks * block_size`` tokens instead of
 work: prompts stream into their slot's KV blocks ``--prefill-budget``
 tokens per step inside the mixed-step executable (core/prefill.py), so a
 new request never freezes resident decoding behind a full prefill.
+``--profile-mix`` cycles per-request decoding profiles over the trace
+(core/profiles.py): beam requests become ``n_beams``-slot groups with
+the Obs #4 KV reorder done as a host-side block-table permutation under
+``--paged``, contrastive requests 2-slot cond/uncond groups — the
+paper's Seamless and Chameleon T-I decoding strategies served through
+the SAME continuous-batching pool as plain sampling.
 
 Reported per request: TTFT (arrival -> first token), TPOT (mean inter-
 token), e2e latency; aggregate: tokens/s, mean slot-occupancy (the
@@ -46,7 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core import engine, sampling
+from repro.core import engine, profiles, sampling
 from repro.core.scheduler import Scheduler, ServeRequest
 from repro.models import get_model
 from repro.training import data as data_mod
@@ -143,6 +149,37 @@ def poisson_trace(
     return reqs
 
 
+def apply_profile_mix(
+    requests: List[ServeRequest],
+    mix: str,
+    *,
+    n_beams: int = 2,
+    beam_eos_id: int = 2,
+    guidance: float = 2.0,
+    uncond_token: int = 0,
+    mask_offset: Optional[int] = None,
+) -> List[ServeRequest]:
+    """Cycle decoding profiles over a trace: ``mix`` is a comma list of
+    kinds (``greedy`` | ``beam`` | ``contrastive``) assigned round-robin
+    by request order — deterministic, so A/B arms see identical work.
+    ``greedy`` leaves the request on the per-slot sampling path."""
+    kinds = [k.strip() for k in mix.split(",") if k.strip()]
+    for i, r in enumerate(requests):
+        kind = kinds[i % len(kinds)]
+        if kind == "greedy":
+            r.profile = None
+        elif kind == "beam":
+            r.profile = profiles.BeamProfile(n_beams=n_beams, eos_id=beam_eos_id)
+        elif kind == "contrastive":
+            r.profile = profiles.ContrastiveProfile(
+                uncond_token=uncond_token, guidance=guidance,
+                mask_offset=mask_offset,
+            )
+        else:
+            raise ValueError(f"unknown profile kind {kind!r}")
+    return requests
+
+
 def serve_metrics(done: List[ServeRequest], wall: float) -> Dict[str, float]:
     total_tok = sum(len(r.tokens) for r in done)
     ttft = [r.ttft for r in done]
@@ -204,6 +241,12 @@ def run_scheduler(
             float(stalls.max()) * 1e3 if len(stalls) else 0.0
         ),
     )
+    if sched.n_group_admissions:
+        m.update(
+            group_admissions=sched.n_group_admissions,
+            cache_reorders=sched.n_cache_reorders,  # contiguous beam fallback
+            block_permutes=sched.n_block_permutes,  # paged beam reorders
+        )
     if paged:
         token_bytes = sched.pool.reserved_bytes / max(
             sched.pool.num_blocks * sched.pool.block_size, 1
@@ -215,12 +258,16 @@ def run_scheduler(
                 sched.peak_used_blocks * sched.pool.block_size * token_bytes
             ),
         )
+        if sched.n_group_admissions:
+            m.update(cow_copies=sched.pool.n_cow_copies)
     if chunked:
         m.update(
             mixed_steps=sched.n_mixed_steps,
             prefill_chunks=sched.n_chunks,
             prefill_chunk_tokens=sched.n_chunk_tokens,
-            full_prefills=sched.n_prefills,  # must stay 0 under chunking
+            # must stay 0 under chunking, except slot-group admissions
+            # (multi-stream profiles take the dense prefill path)
+            full_prefills=sched.n_prefills,
         )
     if return_requests:
         return m, done
@@ -230,20 +277,33 @@ def run_scheduler(
 def warmup(model, params, *, slots: int, pad_to: int, max_new_cap: int,
            paged: bool = False, block_size: int = 16,
            num_blocks: Optional[int] = None, chunked: bool = False,
-           prefill_budget: Optional[int] = None) -> None:
+           prefill_budget: Optional[int] = None,
+           profile_mix: bool = False, n_beams: int = 2) -> None:
     """Compile the serving executables (single-slot prefill, pool decode
     step, slot scatter — plus block copy/length scatter when paged, plus
-    the mixed step when chunked) before any timed run."""
+    the mixed step when chunked) before any timed run. ``profile_mix``
+    additionally warms the slot-group path: a beam group (beam-step top_k,
+    CoW block copy / contiguous reorder) and a contrastive pair."""
     sched = Scheduler(
         model, params, slots=slots, pad_to=pad_to, max_new_cap=max_new_cap,
         paged=paged, block_size=block_size, num_blocks=num_blocks,
         chunked=chunked, prefill_budget=prefill_budget,
     )
     rng = np.random.default_rng(0)
-    sched.run([
+    reqs = [
         ServeRequest(rid=0, prompt=rng.integers(0, 8, size=pad_to), max_new=2),
         ServeRequest(rid=1, prompt=rng.integers(0, 8, size=3), max_new=2),
-    ])
+    ]
+    if profile_mix and slots >= max(n_beams, 2):
+        reqs.append(ServeRequest(
+            rid=2, prompt=rng.integers(0, 8, size=3), max_new=2,
+            profile=profiles.BeamProfile(n_beams=n_beams, eos_id=2),
+        ))
+        reqs.append(ServeRequest(
+            rid=3, prompt=rng.integers(0, 8, size=3), max_new=2,
+            profile=profiles.ContrastiveProfile(uncond_token=0),
+        ))
+    sched.run(reqs)
 
 
 def main(argv=None):
@@ -268,6 +328,15 @@ def main(argv=None):
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="prefill tokens per mixed step; default = "
                          "--block-size")
+    ap.add_argument("--profile-mix", default=None,
+                    help="comma list of decoding profiles cycled over the "
+                         "trace (greedy | beam | contrastive), e.g. "
+                         "'greedy,beam,contrastive' — beam/contrastive "
+                         "requests serve as slot GROUPS")
+    ap.add_argument("--n-beams", type=int, default=2,
+                    help="beams per beam-profile request (--profile-mix)")
+    ap.add_argument("--guidance", type=float, default=2.0,
+                    help="contrastive guidance scale (--profile-mix)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrivals per second; 0 = all at t=0")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -293,10 +362,22 @@ def main(argv=None):
         vocab_size=cfg.vocab_size, arrival_rate=args.arrival_rate,
         seed=args.seed, temperature=args.temperature, top_p=args.top_p,
     )
+    if args.profile_mix:
+        mask_offset = None
+        if getattr(cfg, "vlm", None) is not None:
+            from repro.models import vlm
+
+            mask_offset = vlm.image_token_offset(cfg)
+        apply_profile_mix(
+            reqs, args.profile_mix, n_beams=args.n_beams,
+            beam_eos_id=args.eos_id if args.eos_id is not None else 2,
+            guidance=args.guidance, mask_offset=mask_offset,
+        )
     warmup(model, params, slots=args.batch_slots, pad_to=pad_to,
            max_new_cap=args.max_new, paged=args.paged,
            block_size=args.block_size, num_blocks=args.num_blocks,
-           chunked=args.chunked, prefill_budget=args.prefill_budget)
+           chunked=args.chunked, prefill_budget=args.prefill_budget,
+           profile_mix=bool(args.profile_mix), n_beams=args.n_beams)
     m = run_scheduler(
         model, params, reqs, slots=args.batch_slots, pad_to=pad_to,
         max_new_cap=args.max_new, eos_id=args.eos_id, policy=args.policy,
@@ -305,7 +386,8 @@ def main(argv=None):
         prefill_budget=args.prefill_budget, seed=args.seed,
     )
     mode = args.policy + ("/paged" if args.paged else "") + (
-        "/chunked" if args.chunked else "")
+        "/chunked" if args.chunked else "") + (
+        "/mix" if args.profile_mix else "")
     print(f"[serve/{mode}] {m['n_requests']} requests in "
           f"{m['wall_s']:.2f}s | {m['tokens_per_s']:.1f} tok/s | "
           f"occupancy={m['mean_slot_occupancy']:.2f} | "
@@ -325,6 +407,12 @@ def main(argv=None):
               f"chunks={m['prefill_chunks']} "
               f"({m['prefill_chunk_tokens']} tokens) | "
               f"full prefills={m['full_prefills']}")
+    if args.profile_mix and "group_admissions" in m:
+        print(f"[serve/{mode}] slot groups={m['group_admissions']} | "
+              f"cache reorders={m['cache_reorders']} | "
+              f"block permutes={m['block_permutes']}"
+              + (f" | cow copies={m['cow_copies']}" if "cow_copies" in m
+                 else ""))
     return m
 
 

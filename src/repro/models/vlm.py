@@ -11,8 +11,11 @@ body is `models.transformer`. What this module adds:
   I-T  (captioning: 1024 image tokens + short prompt),
   IT-T (VQA: 1024 image tokens + question),
   T-I  (generation: text prompt, model emits 1024 image tokens);
-- the contrastive (classifier-free-guidance) T-I decode helper used by
-  core/engine.py — the paper's "decodes twice at each time step" profile.
+- the contrastive (classifier-free-guidance) logits helpers — the
+  paper's "decodes twice at each time step" profile, driven as a
+  ``ContrastiveProfile`` (core/profiles.py) by ``engine.run_profile``
+  batch-at-a-time or by the continuous-batching scheduler as a 2-slot
+  cond/uncond group.
 """
 from __future__ import annotations
 
@@ -59,13 +62,14 @@ def contrastive_logits(
 ) -> jnp.ndarray:
     """Contrastive decoding for T-I (paper §2.1.2): conditional logits act
     as the strong model, unconditional as the weak model —
-    logits = uncond + g * (cond - uncond). The engine evaluates BOTH
-    streams every step (2x decode FLOPs, the paper's T-I latency driver)."""
+    logits = uncond + g * (cond - uncond). ``ContrastiveProfile``
+    (core/profiles.py) evaluates BOTH streams every step (2x decode
+    FLOPs, the paper's T-I latency driver) and combines them here."""
     return uncond_logits + guidance * (cond_logits - uncond_logits)
 
 
-def image_token_mask(cfg: ModelConfig, vocab_logits: jnp.ndarray) -> jnp.ndarray:
-    """Restrict sampling to the image-token range during T-I generation."""
-    off = image_token_offset(cfg)
-    mask = jnp.arange(cfg.vocab_size) >= off
+def image_token_mask(offset: int, vocab_logits: jnp.ndarray) -> jnp.ndarray:
+    """Restrict sampling to the image-token range (ids >= ``offset``,
+    from :func:`image_token_offset`) during T-I generation."""
+    mask = jnp.arange(vocab_logits.shape[-1]) >= offset
     return jnp.where(mask[None, :], vocab_logits, -jnp.inf)
