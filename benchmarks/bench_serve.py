@@ -240,28 +240,93 @@ def _profile_mix_gate(n_requests: int = 12, arrival_rate: float = 200.0,
 
 
 def _paged_decode_no_growth():
-    """Satellite gate: lower the paged decode-step executable and assert no
-    intermediate carries the full gathered per-slot K/V sequence — neither
-    [B, MB*bs, ...] nor its pre-reshape [B, MB, bs, ...] form. The
-    blockwise paged attention's largest per-layer scratch is [B, bs, ...].
-    Returns (ok, offending_shape_patterns)."""
-    import jax.numpy as jnp
-
-    from repro.core import engine
-    from repro.core.scheduler import Scheduler
+    """Satellite gate, delegated to repro.analysis.trace_audit (the
+    generalization of the hand-rolled HLO scan this bench used to carry):
+    lower the paged decode-step executable and assert it materializes NO
+    full gathered per-slot K/V transient (paged_growth_patterns) and
+    holds the general static-envelope invariant — no dynamic dims, no
+    intermediate beyond the envelope slack of its own signature.
+    Returns (ok, failure_strings)."""
+    from repro.analysis import trace_audit
 
     model, params = _smoke_model()
-    sched = Scheduler(model, params, slots=SLOTS, pad_to=PAD_TO,
-                      max_new_cap=MAX_NEW_CAP, paged=True,
-                      block_size=BLOCK_SIZE, num_blocks=NUM_BLOCKS)
-    txt = engine.decode_step.lower(
-        model, params, sched.pool.cache, jnp.zeros((SLOTS,), jnp.int32)
-    ).as_text()
-    mb = sched.pool.max_blocks
-    bad = [f"tensor<{SLOTS}x{mb * BLOCK_SIZE}x",
-           f"tensor<{SLOTS}x{mb}x{BLOCK_SIZE}x"]
-    hits = [p for p in bad if p in txt]
-    return not hits, hits
+    lowered = trace_audit.lower_serving(
+        model, params, paged=True, slots=SLOTS, pad_to=PAD_TO,
+        max_new_cap=MAX_NEW_CAP, block_size=BLOCK_SIZE,
+        num_blocks=NUM_BLOCKS, prefill_budget=PREFILL_BUDGET,
+    )
+    pool = lowered.pop("_pool")
+    fails = trace_audit.audit_no_growth(
+        lowered["decode_step"],
+        forbidden=trace_audit.paged_growth_patterns(
+            SLOTS, pool.max_blocks, BLOCK_SIZE
+        ),
+        label="paged/decode_step",
+    )
+    return not fails, fails
+
+
+def _snapshot(n_requests: int = N_REQUESTS, arrival_rate: float = 200.0,
+              seed: int = 0) -> dict:
+    """Perf-trajectory snapshot (checked in as benchmarks/BENCH_serve.json):
+    all four serving arms on the pinned smoke workload, plus the
+    repro.analysis counters that guard the hot path — per-executable
+    donation/aliasing leaf counts and the recompile count across a second
+    same-geometry trace (must stay 0). Wall-clock fields drift with the
+    host; the structural fields (steps, token identity, donation counts,
+    recompiles) are the trajectory the checked-in history tracks."""
+    from repro.analysis import trace_audit
+
+    model, params = _smoke_model()
+    r, toks = _ab(n_requests, arrival_rate, seed,
+                  arms=("fixed", "continuous", "paged", "chunked"))
+    fx, ct, pg, ck = r["fixed"], r["continuous"], r["paged"], r["chunked"]
+
+    lowered = trace_audit.lower_serving(
+        model, params, paged=True, slots=SLOTS, pad_to=PAD_TO,
+        max_new_cap=MAX_NEW_CAP, block_size=BLOCK_SIZE,
+        num_blocks=NUM_BLOCKS, prefill_budget=PREFILL_BUDGET,
+    )
+    lowered.pop("_pool")
+    recompile_fails = trace_audit.audit_recompiles(model, params)
+
+    def clean(v):
+        if isinstance(v, dict):
+            return {k: clean(x) for k, x in v.items()}
+        if isinstance(v, float):
+            return round(float(v), 4)
+        if hasattr(v, "item"):  # numpy scalar
+            return clean(v.item())
+        return v
+
+    return {
+        "schema": 1,
+        "bench": "bench_serve",
+        "workload": {
+            "arch": ARCH, "profile": PROFILE, "slots": SLOTS,
+            "pad_to": PAD_TO, "max_new_cap": MAX_NEW_CAP,
+            "block_size": BLOCK_SIZE, "num_blocks": NUM_BLOCKS,
+            "prefill_budget": PREFILL_BUDGET, "n_requests": n_requests,
+            "arrival_rate": arrival_rate, "seed": seed,
+        },
+        "arms": {name: clean(m) for name, m in r.items()},
+        "derived": clean({
+            "continuous_speedup":
+                ct["tokens_per_s"] / max(fx["tokens_per_s"], 1e-9),
+            "paged_kv_reserved_ratio":
+                pg["kv_reserved_bytes"] / max(ct["kv_reserved_bytes"], 1),
+            "token_identical": {
+                "paged_vs_continuous": toks["paged"] == toks["continuous"],
+                "chunked_vs_paged": toks["chunked"] == toks["paged"],
+            },
+        }),
+        "analysis": {
+            "donation": {name: trace_audit.donation_summary(low)
+                         for name, low in lowered.items()},
+            "recompiles": len(recompile_fails),
+            "recompile_failures": recompile_fails,
+        },
+    }
 
 
 def bench() -> list[Row]:
@@ -317,11 +382,30 @@ def main(argv=None) -> int:
     ap.add_argument("--n-requests", type=int, default=N_REQUESTS)
     ap.add_argument("--arrival-rate", type=float, default=200.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--snapshot", metavar="PATH",
+                    help="run all four arms plus the repro.analysis "
+                         "donation/recompile counters and write the "
+                         "perf-trajectory JSON (benchmarks/BENCH_serve.json "
+                         "is the checked-in copy), then exit")
     args = ap.parse_args(argv)
     if args.chunked and not args.paged:
         ap.error("--chunked requires --paged")
     if args.profile_mix and not (args.paged and args.chunked):
         ap.error("--profile-mix requires --paged --chunked")
+
+    if args.snapshot:
+        import json
+
+        data = _snapshot(args.n_requests, args.arrival_rate, args.seed)
+        with open(args.snapshot, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        ok = (data["analysis"]["recompiles"] == 0
+              and all(data["derived"]["token_identical"].values()))
+        print(f"snapshot -> {args.snapshot}  recompiles="
+              f"{data['analysis']['recompiles']}  token_identical="
+              f"{data['derived']['token_identical']}")
+        return 0 if ok else 1
 
     if args.profile_mix:
         # fully deterministic leg (greedy settings end to end): no retry

@@ -1,0 +1,525 @@
+"""Layer 1: rule-based AST lint over ``src/repro`` (see package docstring).
+
+Rules
+-----
+``HS001``
+    Host sync inside a hot-path function (``@hot_path`` decorator or
+    :data:`repro.analysis.hotpath.HOT_PATHS` entry): ``np.asarray`` /
+    ``np.array``, ``.item()``, ``.block_until_ready()``, and
+    ``float()``/``int()``/``bool()`` casts. ``jax.device_get(...)`` is
+    the sanctioned sync idiom and is never flagged — nor is a cast whose
+    argument *is* a ``device_get`` call (already host data) or ``len()``.
+``DN001``
+    A ``jax.jit`` site (decorator, ``functools.partial(jax.jit, ...)``
+    decorator, or ``jax.jit(f, ...)`` call on a resolvable function)
+    whose wrapped function has a KV/cache-typed parameter — name
+    matching ``cache|pool|kv|buf`` — not covered by
+    ``donate_argnums``/``donate_argnames``.
+``TB001``
+    Inside a jit-decorated function: an ``if``/``while`` whose test
+    reads a non-static parameter (``x is None`` presence checks are
+    exempt), or a ``bool()``/``int()``/``float()`` cast on a
+    non-constant value — Python control flow that either concretizes a
+    tracer or silently bakes one trace-time branch into the executable.
+
+Suppression: ``# repro-lint: disable=RULE[,RULE2]`` on the offending
+line (anywhere within a multi-line statement) or as a standalone
+comment on the line directly above. Every suppression should carry a
+justification in prose on the same comment.
+
+Findings carry a *fingerprint* — ``rule:path:qualname:snippet`` — that
+is stable across line-number drift; ``baseline.json`` stores
+fingerprints of findings that pre-date the lint so CI fails only on NEW
+findings (and the baseline shrinks toward empty as they are fixed).
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.hotpath import HOT_PATHS
+
+RULES: Dict[str, str] = {
+    "HS001": "host sync inside a serving hot-path function",
+    "DN001": "jit site missing donation for a KV/cache-typed parameter",
+    "TB001": "Python branch/cast on a traced value inside a jitted function",
+}
+
+#: Parameter names that denote KV/cache-sized device state (DN001).
+KV_PARAM_RE = re.compile(r"cache|pool|kv|buf")
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Z0-9_,\s]+)")
+_NUMPY_ALIASES = ("np", "numpy", "onp")
+_CAST_BUILTINS = ("bool", "int", "float")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str  # repo-relative posix path
+    line: int
+    qualname: str
+    message: str
+    snippet: str  # stripped source of the offending line
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}:{self.path}:{self.qualname}:{self.snippet}"
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule} [{self.qualname}] "
+                f"{self.message}\n    {self.snippet}")
+
+
+# --------------------------------------------------------------------------
+# small AST helpers
+# --------------------------------------------------------------------------
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` -> "a.b.c" for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _literal_ints(node: Optional[ast.AST]) -> Optional[Tuple[int, ...]]:
+    """Evaluate an int / tuple-of-ints literal; None if not literal."""
+    if node is None:
+        return None
+    try:
+        val = ast.literal_eval(node)
+    except (ValueError, SyntaxError):
+        return None
+    if isinstance(val, int):
+        return (val,)
+    if isinstance(val, (tuple, list)) and all(isinstance(v, int) for v in val):
+        return tuple(val)
+    return None
+
+
+def _literal_strs(node: Optional[ast.AST]) -> Optional[Tuple[str, ...]]:
+    if node is None:
+        return None
+    try:
+        val = ast.literal_eval(node)
+    except (ValueError, SyntaxError):
+        return None
+    if isinstance(val, str):
+        return (val,)
+    if isinstance(val, (tuple, list)) and all(isinstance(v, str) for v in val):
+        return tuple(val)
+    return None
+
+
+@dataclass
+class JitSite:
+    """One resolved ``jax.jit`` application (decorator or call)."""
+
+    line: int
+    static_argnums: Tuple[int, ...]
+    static_argnames: Tuple[str, ...]
+    donate_argnums: Optional[Tuple[int, ...]]  # None = unparseable literal
+    donate_argnames: Tuple[str, ...]
+    unparseable_donation: bool = False
+
+
+def _jit_site(node: ast.AST) -> Optional[JitSite]:
+    """Recognize ``jax.jit`` / ``jit`` / ``functools.partial(jax.jit,...)``
+    / ``jax.jit(...)`` and pull out the donation/static kwargs."""
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        d = _dotted(node)
+        if d in ("jax.jit", "jit"):
+            return JitSite(node.lineno, (), (), (), ())
+        return None
+    if not isinstance(node, ast.Call):
+        return None
+    fn = _dotted(node.func)
+    kwargs = {k.arg: k.value for k in node.keywords if k.arg}
+    if fn in ("jax.jit", "jit"):
+        pass  # direct jit(...) call
+    elif fn in ("functools.partial", "partial"):
+        if not node.args or _dotted(node.args[0]) not in ("jax.jit", "jit"):
+            return None
+    else:
+        return None
+    donate = _literal_ints(kwargs.get("donate_argnums"))
+    unparseable = "donate_argnums" in kwargs and donate is None
+    return JitSite(
+        line=node.lineno,
+        static_argnums=_literal_ints(kwargs.get("static_argnums")) or (),
+        static_argnames=_literal_strs(kwargs.get("static_argnames")) or (),
+        donate_argnums=donate if donate is not None else (),
+        donate_argnames=_literal_strs(kwargs.get("donate_argnames")) or (),
+        unparseable_donation=unparseable,
+    )
+
+
+def _param_names(fn: ast.AST) -> List[str]:
+    args = fn.args
+    return [a.arg for a in args.posonlyargs + args.args]
+
+
+def _is_device_get_call(node: ast.AST) -> bool:
+    if isinstance(node, ast.Call):
+        d = _dotted(node.func)
+        return bool(d) and d.split(".")[-1] == "device_get"
+    return False
+
+
+def _host_assigned_names(fn: ast.AST) -> Set[str]:
+    """Names this function binds from an explicit host transfer —
+    ``x = jax.device_get(...)`` or a tuple-unpack of one — plus casts
+    and ``len``. Casting such a name (or a subscript of it) later is
+    host-side arithmetic, not a sync."""
+    host: Set[str] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        val, tgt = node.value, node.targets[0]
+        is_host = _is_device_get_call(val) or (
+            isinstance(val, ast.Call)
+            and isinstance(val.func, ast.Name)
+            and val.func.id in _CAST_BUILTINS + ("len",)
+        )
+        if not is_host:
+            continue
+        if isinstance(tgt, ast.Name):
+            host.add(tgt.id)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            host.update(e.id for e in tgt.elts if isinstance(e, ast.Name))
+    return host
+
+
+def _is_presence_test(test: ast.AST) -> bool:
+    """``x is None`` / ``x is not None`` (argument presence is static)."""
+    if isinstance(test, ast.Compare):
+        return all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops)
+    return False
+
+
+# --------------------------------------------------------------------------
+# per-file linter
+# --------------------------------------------------------------------------
+
+class _FileLint(ast.NodeVisitor):
+    def __init__(self, rel_path: str, module_name: str, source: str):
+        self.rel_path = rel_path
+        self.module = module_name
+        self.lines = source.splitlines()
+        self.findings: List[Finding] = []
+        self._qual: List[str] = []  # class/function name stack
+        self._hot_depth = 0  # >0 while inside a hot-path function
+        self._jit_stack: List[Tuple[Set[str], JitSite]] = []  # nonstatic params
+        self._host_stack: List[Set[str]] = []  # names bound via device_get
+        # line -> set of rule ids suppressed there
+        self._suppress: Dict[int, Set[str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(text)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+                self._suppress[i] = rules
+                if text.strip().startswith("#"):
+                    # a standalone comment suppresses the next code line;
+                    # continuation comment lines extend the reach
+                    j = i + 1
+                    while (j <= len(self.lines)
+                           and self.lines[j - 1].strip().startswith("#")):
+                        j += 1
+                    self._suppress.setdefault(j, set()).update(rules)
+
+    # ---- plumbing --------------------------------------------------------
+    def _qualname(self) -> str:
+        return ".".join(self._qual) if self._qual else "<module>"
+
+    def _suppressed(self, rule: str, node: ast.AST) -> bool:
+        start = node.lineno
+        for deco in getattr(node, "decorator_list", []):
+            start = min(start, deco.lineno)  # cover @jit decorator lines
+        end = getattr(node, "end_lineno", node.lineno) or node.lineno
+        for line in range(start, end + 1):
+            if rule in self._suppress.get(line, set()):
+                return True
+        return False
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        if self._suppressed(rule, node):
+            return
+        line = node.lineno
+        snippet = self.lines[line - 1].strip() if line <= len(self.lines) else ""
+        self.findings.append(Finding(
+            rule=rule, path=self.rel_path, line=line,
+            qualname=self._qualname(), message=message, snippet=snippet,
+        ))
+
+    # ---- scopes ----------------------------------------------------------
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._qual.append(node.name)
+        self.generic_visit(node)
+        self._qual.pop()
+
+    def _function_is_hot(self, node) -> bool:
+        for deco in node.decorator_list:
+            d = _dotted(deco)
+            if d and d.split(".")[-1] == "hot_path":
+                return True
+        # _qual already ends with node.name when this runs (see
+        # _visit_function), so the dotted name is module + qual stack
+        return f"{self.module}.{'.'.join(self._qual)}" in HOT_PATHS
+
+    def _function_jit(self, node) -> Optional[JitSite]:
+        for deco in node.decorator_list:
+            site = _jit_site(deco)
+            if site is not None:
+                return site
+        return None
+
+    def _visit_function(self, node) -> None:
+        self._qual.append(node.name)
+        hot = self._function_is_hot(node)
+        site = self._function_jit(node)
+        if site is not None:
+            self._check_donation(node, site)
+            params = _param_names(node)
+            static = {params[i] for i in site.static_argnums
+                      if 0 <= i < len(params)}
+            static |= set(site.static_argnames)
+            self._jit_stack.append((set(params) - static, site))
+        self._hot_depth += 1 if hot else 0
+        self._host_stack.append(_host_assigned_names(node))
+        self.generic_visit(node)
+        self._host_stack.pop()
+        self._hot_depth -= 1 if hot else 0
+        if site is not None:
+            self._jit_stack.pop()
+        self._qual.pop()
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    # ---- DN001: donation coverage at jit sites ---------------------------
+    def _check_donation(self, fn, site: JitSite) -> None:
+        if site.unparseable_donation:
+            return  # dynamically computed donate_argnums: trust it
+        params = _param_names(fn)
+        donated = set(site.donate_argnums or ())
+        donated |= {i for i, p in enumerate(params)
+                    if p in site.donate_argnames}
+        static = set(site.static_argnums) | {
+            i for i, p in enumerate(params) if p in site.static_argnames
+        }
+        for i, name in enumerate(params):
+            if i in static or i in donated:
+                continue
+            if KV_PARAM_RE.search(name):
+                self._emit(
+                    "DN001", fn,
+                    f"jit of {fn.name!r}: KV-typed parameter {name!r} "
+                    f"(arg {i}) is not in donate_argnums — an undonated "
+                    f"cache-sized buffer doubles peak KV memory",
+                )
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        # f = jax.jit(g, ...) — resolve g when it's a module-level def
+        if isinstance(node.value, ast.Call):
+            site = _jit_site(node.value)
+            if site is not None and node.value.args:
+                target = node.value.args[0]
+                fn = None
+                if isinstance(target, ast.Lambda):
+                    fn = target
+                elif isinstance(target, ast.Name):
+                    fn = self._module_defs.get(target.id)
+                if fn is not None and not isinstance(fn, ast.Lambda):
+                    self._check_donation(fn, site)
+                elif isinstance(fn, ast.Lambda):
+                    params = [a.arg for a in fn.args.args]
+                    donated = set(site.donate_argnums or ())
+                    for i, name in enumerate(params):
+                        if i in donated or i in set(site.static_argnums):
+                            continue
+                        if KV_PARAM_RE.search(name) and not self._suppressed(
+                                "DN001", node):
+                            self._emit(
+                                "DN001", node,
+                                f"jit of lambda: KV-typed parameter "
+                                f"{name!r} (arg {i}) is not donated",
+                            )
+        self.generic_visit(node)
+
+    def visit_Module(self, node: ast.Module) -> None:
+        self._module_defs = {
+            n.name: n for n in node.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        self.generic_visit(node)
+
+    # ---- HS001 / TB001 expression checks ---------------------------------
+    def _sanctioned_cast_arg(self, node: ast.AST) -> bool:
+        """Casting HOST data is fine: constants, ``len()``, a
+        ``device_get`` result, or any expression rooted at a name the
+        function bound from one (``feed[i]``, ``done.all()``, ...)."""
+        if isinstance(node, ast.Constant):
+            return True
+        host = set().union(*self._host_stack) if self._host_stack else set()
+        while True:
+            if _is_device_get_call(node):
+                return True
+            if isinstance(node, ast.Call):
+                if _dotted(node.func) == "len":
+                    return True
+                if isinstance(node.func, ast.Attribute):
+                    node = node.func.value  # method call: peel to receiver
+                    continue
+                return False
+            if isinstance(node, (ast.Subscript, ast.Attribute)):
+                node = node.value
+                continue
+            if isinstance(node, ast.Name):
+                return node.id in host
+            return False
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if self._hot_depth > 0:
+            self._check_host_sync(node)
+        if self._jit_stack:
+            self._check_traced_cast(node)
+        self.generic_visit(node)
+
+    def _check_host_sync(self, node: ast.Call) -> None:
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            owner = _dotted(func.value)
+            if owner in _NUMPY_ALIASES and func.attr in ("asarray", "array"):
+                self._emit(
+                    "HS001", node,
+                    f"{owner}.{func.attr}() on a device value blocks the "
+                    f"host per call — fold it into the step's single "
+                    f"jax.device_get",
+                )
+            elif func.attr == "item" and not node.args:
+                self._emit("HS001", node,
+                           ".item() forces a per-element device sync")
+            elif func.attr == "block_until_ready":
+                self._emit("HS001", node,
+                           "block_until_ready() stalls the dispatch "
+                           "pipeline inside the hot path")
+        elif isinstance(func, ast.Name) and func.id in _CAST_BUILTINS:
+            if node.args and not self._sanctioned_cast_arg(node.args[0]):
+                self._emit(
+                    "HS001", node,
+                    f"{func.id}() on a device value is a hidden host "
+                    f"sync — device_get first, cast the host result",
+                )
+
+    def _check_traced_cast(self, node: ast.Call) -> None:
+        func = node.func
+        if isinstance(func, ast.Name) and func.id in _CAST_BUILTINS:
+            if node.args and not isinstance(node.args[0], ast.Constant):
+                self._emit(
+                    "TB001", node,
+                    f"{func.id}() inside a jitted function concretizes a "
+                    f"tracer (ConcretizationTypeError at best, a baked-in "
+                    f"trace-time constant at worst)",
+                )
+
+    def _check_traced_branch(self, node) -> None:
+        if not self._jit_stack or _is_presence_test(node.test):
+            return
+        nonstatic, _ = self._jit_stack[-1]
+        hits = sorted({
+            n.id for n in ast.walk(node.test)
+            if isinstance(n, ast.Name) and n.id in nonstatic
+        })
+        if hits:
+            kind = "if" if isinstance(node, ast.If) else "while"
+            self._emit(
+                "TB001", node,
+                f"`{kind}` on non-static parameter(s) {', '.join(hits)} "
+                f"inside a jitted function: the branch is resolved at "
+                f"trace time and baked into the executable",
+            )
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_traced_branch(node)
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_traced_branch(node)
+        self.generic_visit(node)
+
+
+# --------------------------------------------------------------------------
+# tree runner + baseline
+# --------------------------------------------------------------------------
+
+def lint_source(source: str, rel_path: str = "<memory>",
+                module_name: str = "<memory>") -> List[Finding]:
+    """Lint one source string (unit-test entry point)."""
+    lint = _FileLint(rel_path, module_name, source)
+    lint.visit(ast.parse(source))
+    return lint.findings
+
+
+def _module_name(rel: Path) -> str:
+    parts = list(rel.with_suffix("").parts)
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    return ".".join(parts)
+
+
+def lint_paths(root: Path, subdirs: Sequence[str] = ("src/repro",),
+               exclude: Sequence[str] = ("src/repro/analysis",),
+               ) -> List[Finding]:
+    """Lint every ``.py`` under ``root/<subdir>`` (repo-relative paths in
+    findings). The analysis package itself is excluded by default — its
+    fixture strings would self-flag."""
+    root = Path(root)
+    findings: List[Finding] = []
+    for sub in subdirs:
+        for path in sorted((root / sub).rglob("*.py")):
+            rel = path.relative_to(root)
+            if any(rel.as_posix().startswith(e) for e in exclude):
+                continue
+            findings.extend(lint_source(
+                path.read_text(), rel.as_posix(), _module_name(rel)
+            ))
+    return findings
+
+
+def load_baseline(path: Path) -> Set[str]:
+    path = Path(path)
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return set(data.get("findings", []))
+
+
+def write_baseline(findings: Sequence[Finding], path: Path) -> None:
+    payload = {
+        "comment": (
+            "Fingerprints of lint findings that pre-date the rule. CI "
+            "fails only on findings NOT listed here; shrink this toward "
+            "empty — justified exceptions belong in repro-lint disable "
+            "comments next to the code, not in this file."
+        ),
+        "findings": sorted({f.fingerprint for f in findings}),
+    }
+    Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+
+
+def apply_baseline(findings: Sequence[Finding], baseline: Set[str],
+                   ) -> Tuple[List[Finding], Set[str]]:
+    """Split into (new findings, stale baseline fingerprints)."""
+    fps = {f.fingerprint for f in findings}
+    new = [f for f in findings if f.fingerprint not in baseline]
+    stale = baseline - fps
+    return new, stale

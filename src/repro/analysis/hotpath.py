@@ -1,0 +1,46 @@
+"""Hot-path marking for the HS001 host-sync lint rule.
+
+A *hot-path* function is one that runs per decode step while requests
+are resident — the code where a stray host sync (``np.asarray``,
+``.item()``, a ``bool()`` cast on a device value) re-opens the idle
+bubbles the paper's Obs #2 measures. Two ways to mark one:
+
+- decorate it with :func:`hot_path` (a runtime no-op; the AST lint
+  detects the decorator statically), or
+- list its dotted name in :data:`HOT_PATHS` — for functions whose
+  modules should not import this package, or to mark third-party-shaped
+  seams without touching their source.
+
+Admission / finish bookkeeping (``_admit_one`` & co.) is deliberately
+NOT hot: it runs once per request, already contains a prefill program,
+and its `int()` casts are request-lifecycle work — the per-TOKEN loop
+is what the rule protects.
+
+This module must stay dependency-free: core serving modules import the
+decorator, and they must never pull the analysis machinery (ast/json)
+into the serving process.
+"""
+from __future__ import annotations
+
+from typing import Callable, TypeVar
+
+F = TypeVar("F", bound=Callable)
+
+#: Dotted names (``module.qualname``) treated as hot without a
+#: decorator. Kept for seams where decorating is impossible or
+#: undesirable; prefer ``@hot_path`` where the source is ours.
+HOT_PATHS = frozenset({
+    # the pool-wide per-token device programs (jit-decorated, so the
+    # registry marks them instead of stacking a second decorator on the
+    # PjitFunction object)
+    "repro.core.engine.decode_step",
+    "repro.core.engine.mixed_step",
+})
+
+
+def hot_path(fn: F) -> F:
+    """Mark ``fn`` as serving-hot-path for the AST lint (HS001). Runtime
+    no-op: returns ``fn`` unchanged (no wrapper — jit caches, bound
+    methods and reprs all see the original function)."""
+    fn.__repro_hot_path__ = True  # introspectable, e.g. for tests
+    return fn

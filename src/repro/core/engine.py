@@ -50,6 +50,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.hotpath import hot_path
 from repro.core import kv_cache, profiles, sampling
 from repro.models.registry import Model
 
@@ -69,6 +70,9 @@ def prefill(model: Model, params, tokens, prompt_lengths, max_len, extra=None):
     it with batch=1 as the single-slot refill prefill."""
     cache = model.init_cache(tokens.shape[0], max_len)
     batch = {"tokens": tokens, "prompt_lengths": prompt_lengths}
+    # repro-lint: disable=TB001 — branches on the PYTREE STRUCTURE of
+    # ``extra`` (None/empty vs dict of arrays), which is part of the jit
+    # cache key, never on traced values inside it
     if extra:
         batch.update(extra)
     logits, cache, _ = model.forward(params, batch, cache=cache, mode="prefill")
@@ -116,6 +120,7 @@ def mixed_step(model: Model, params, cache, tokens, t_new, lengths):
 # the ONE profile-driven decode loop
 # --------------------------------------------------------------------------
 
+@hot_path
 def run_profile(
     model: Model,
     params,
@@ -161,7 +166,9 @@ def run_profile(
         if out.perm is not None:  # Obs #4: the KV_Cache_Reorder op
             cache = reorder(cache, out.perm)
         n_steps += 1
-        halt = out.done is not None and bool(out.done.all())
+        # the loop's one deliberate host sync: a single scalar transfer
+        # (device_get), not a stray bool() on the device array
+        halt = out.done is not None and bool(jax.device_get(out.done.all()))
     result = profile.finalize(state)
     result.update(cache=cache, n_steps=n_steps)
     return result

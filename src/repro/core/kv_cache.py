@@ -124,6 +124,9 @@ def reorder_donated(cache: Any, beam_idx: jnp.ndarray) -> Any:
     return reorder(cache, beam_idx)
 
 
+# repro-lint: disable=DN001 — DELIBERATELY undonated: this is the
+# paper's `index_select` baseline arm for the Obs #4 A/B (reorder_donated
+# above is the optimized form); donating here would erase the comparison
 @jax.jit
 def reorder_realloc(cache: Any, beam_idx: jnp.ndarray) -> Any:
     """Unoptimized reorder: no donation — every call allocates a fresh

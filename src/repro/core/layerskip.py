@@ -84,6 +84,9 @@ def early_exit_forward(
     return logits, new_cache
 
 
+# repro-lint: disable=DN001 — ``cache`` must NOT be donated: drafting
+# writes a scratch copy and the caller re-extends the ORIGINAL cache in
+# the verify step (and rolls back to it on draft rejection)
 @functools.partial(jax.jit, static_argnums=(0, 1, 4))
 def _draft_tokens(
     model: Model, n_draft: int, params, cache, exit_layer: int, token0
@@ -105,6 +108,9 @@ def _draft_tokens(
     return drafts.T  # [B, n_draft]
 
 
+# repro-lint: disable=DN001 — ``cache`` must NOT be donated: on draft
+# rejection the loop rewinds to the PRE-verify cache (speculative
+# decoding keeps the original alive past this call by design)
 @functools.partial(jax.jit, static_argnums=(0,))
 def _verify(model: Model, params, cache, window_tokens):
     """Full-model extend over [token0, d_1..d_k]; returns greedy

@@ -81,6 +81,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.hotpath import hot_path
 from repro.core import engine, kv_cache, profiles, sampling
 from repro.core.prefill import ChunkCursor, ChunkedPrefill
 from repro.core.slot_pool import BlockPool, SlotPool
@@ -181,6 +182,10 @@ class GroupState:
     n_generated: int = 0
     kv_len: int = 0
     admit_seq: int = 0
+    # device-resident copy of ``slots`` (int32), built once at admission:
+    # the per-step logits row gather indexes with it directly instead of
+    # re-uploading the host list every step
+    slot_rows: Any = None
 
 
 class Scheduler:
@@ -475,6 +480,7 @@ class Scheduler:
             req=req, slots=slots, profile=prof,
             pstate=prof.init(1, req.max_new), kv_len=n_prompt,
             admit_seq=self._seq,
+            slot_rows=jnp.asarray(slots, jnp.int32),
         )
         self._seq += 1
         self.n_group_admissions += 1
@@ -587,6 +593,7 @@ class Scheduler:
         self.waiting.appendleft(st.req)
         self.n_preemptions += 1
 
+    @hot_path
     def _ensure_blocks(self) -> None:
         """Before a paged decode step every active slot must own the block
         its next token writes into — EXCLUSIVELY, for group streams whose
@@ -624,14 +631,18 @@ class Scheduler:
                         break  # this slot WAS the victim; it queues
 
     # ---- decode ----------------------------------------------------------
+    @hot_path
     def _sample(self, logits) -> np.ndarray:
+        """Per-slot sampling; the ONE host sync of a plain decode step
+        (``device_get``, not ``np.asarray`` — explicit, and batching-
+        friendly if more per-step outputs ever join the transfer)."""
         if not self._temp.any():  # all-greedy pool: skip the top-p pipeline
-            return np.asarray(sampling.greedy(logits))
+            return jax.device_get(sampling.greedy(logits))
         keys = sampling.slot_step_keys(
             self.base_key, jnp.asarray(self._rid), jnp.asarray(self._ngen),
             jnp.asarray(self._stream),
         )
-        return np.asarray(
+        return jax.device_get(
             sampling.sample_slots(
                 logits, keys, jnp.asarray(self._temp), jnp.asarray(self._top_p)
             )
@@ -675,6 +686,7 @@ class Scheduler:
                 self._temp[slot] = 0.0  # free slots decode greedy garbage
         return done
 
+    @hot_path
     def step(self) -> List[ServeRequest]:
         """One pool-wide step; returns requests finished by it. With
         pending chunk cursors the step is the mixed-step executable;
@@ -683,6 +695,7 @@ class Scheduler:
             return self._step_mixed()
         return self._step_decode()
 
+    @hot_path
     def _step_decode(self) -> List[ServeRequest]:
         if self.paged:
             self._ensure_blocks()
@@ -700,6 +713,7 @@ class Scheduler:
         done += self._commit_groups(logits, now)
         return done
 
+    @hot_path
     def _step_mixed(self) -> List[ServeRequest]:
         """One token-budget mixed step: decode tokens for every live slot
         PLUS up to ``prefill_budget`` prompt-chunk tokens (the plan from
@@ -768,13 +782,14 @@ class Scheduler:
             self.n_chunk_tokens += ch.t
             if cur.done:
                 self.chunk_mgr.remove(ch.slot)
-                self._finish_prefill(cur, int(toks[ch.slot]), now)
+                self._finish_prefill(cur, toks[ch.slot], now)
         return done
 
-    def _finish_prefill(self, cur: ChunkCursor, first: int, now: float) -> None:
+    def _finish_prefill(self, cur: ChunkCursor, first, now: float) -> None:
         """The final chunk's last-lane logits ARE the first-token logits:
         commit the request's first token and flip the slot from prefill to
         decode (its device length already equals the prompt length)."""
+        first = int(first)  # host value from _sample's device_get
         req = cur.req
         req.t_first = now
         req.tokens.append(first)
@@ -794,6 +809,7 @@ class Scheduler:
         self._ngen[cur.slot] = 1
 
     # ---- slot groups (multi-stream decoding profiles) ---------------------
+    @hot_path
     def _advance_group(self, g: GroupState, logit_rows, now: float) -> bool:
         """One profile step for one slot group: the profile consumes the
         group's [n_streams, V] logits rows, picks every stream's next feed
@@ -807,22 +823,27 @@ class Scheduler:
         )
         out = g.profile.step(g.pstate, logit_rows, key)
         g.pstate = out.state
-        if out.perm is not None:
-            self._apply_group_perm(g, np.asarray(out.perm))
+        # ONE host sync for everything this step needs on the host — the
+        # feed tokens, the beam permutation, and the finish flags — instead
+        # of a blocking np.asarray per field (device_get batches the pytree
+        # into a single transfer; None leaves pass through untouched)
+        feed, perm, done = jax.device_get((out.feed, out.perm, out.done))
+        if perm is not None:
+            self._apply_group_perm(g, perm)
         g.n_generated += 1
         if g.n_generated == 1:
             g.req.t_first = now
         g.req.t_tokens.append(now)
-        feed = np.asarray(out.feed)
         for i, s in enumerate(g.slots):
             self._token[s] = int(feed[i])
             self._ngen[s] = g.n_generated
-        finished = out.done is not None and bool(np.asarray(out.done).all())
+        finished = done is not None and bool(done.all())
         if finished or g.n_generated >= g.req.max_new:
             self._finish_group(g, now)
             return True
         return False
 
+    @hot_path
     def _apply_group_perm(self, g: GroupState, perm: np.ndarray) -> None:
         """Re-bind each stream's cache to its surviving parent's (beam's
         Obs #4 reorder). Paged: a pure host-side block-table permutation
@@ -838,6 +859,8 @@ class Scheduler:
             self.n_block_permutes += 1
         else:
             full = np.arange(self.slots)
+            # repro-lint: disable=HS001 — g.slots is a host list of slot
+            # ids; this asarray never touches the device
             sl = np.asarray(g.slots)
             full[sl] = sl[perm]
             self.pool.cache = kv_cache.reorder_donated(
@@ -845,13 +868,15 @@ class Scheduler:
             )
             self.n_cache_reorders += 1
 
+    @hot_path
     def _commit_groups(self, logits, now: float) -> List[ServeRequest]:
         """Advance every resident group on the pool-wide step's logits
-        (each group's rows gathered by its slots). Runs AFTER the device
-        step wrote each stream's K/V at kv_len, hence the increment."""
+        (each group's rows gathered by its admission-time device index —
+        no per-step host list upload). Runs AFTER the device step wrote
+        each stream's K/V at kv_len, hence the increment."""
         done: List[ServeRequest] = []
         for g in list(self.groups.values()):
-            rows = logits[jnp.asarray(np.asarray(g.slots, np.int32))]
+            rows = logits[g.slot_rows]
             g.kv_len += 1
             if self._advance_group(g, rows, now):
                 done.append(g.req)

@@ -31,6 +31,7 @@ from typing import Any, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.hotpath import hot_path
 from repro.core import kv_cache
 from repro.models.registry import Model
 
@@ -105,6 +106,7 @@ class SlotPool(_PoolBase):
         self.cache = kv_cache.reset_slots(self.cache, mask)
         heapq.heappush(self._free, slot)
 
+    @hot_path
     def sync(self) -> None:
         """No host-side tables to flush (BlockPool signature parity)."""
 
@@ -343,6 +345,7 @@ class BlockPool(_PoolBase):
         mask = jnp.zeros((self.slots,), bool).at[slot].set(True)
         self.cache = kv_cache.free_blocks(self.cache, mask)
 
+    @hot_path
     def sync(self) -> None:
         """Ship the host block table to the device if it changed since the
         last decode step (one tiny [slots, max_blocks] int32 transfer)."""

@@ -119,6 +119,13 @@ def _flash_xla(q, k, v, qpos, kpos, causal, window, k_valid, scale, block_k):
     """Chunked online-softmax attention: scans KV in blocks, never
     materializing the [Tq, Tk] score matrix. GQA-aware (KV loaded once per
     Q-head group)."""
+    # Never pad KV beyond the actual sequence: with the defaults
+    # (block_k=512/1024) a short cache (e.g. an 81-token smoke decode)
+    # would be zero-padded up to a full block, materializing transients
+    # ~12x the cache itself (caught by repro.analysis audit_no_growth).
+    # Masked pad rows contribute exact zeros to the online softmax, so
+    # clamping is bit-identical.
+    block_k = min(block_k, max(k.shape[1], 1))
     if XLA_FLASH_LAYOUT == "sliced":
         return _flash_xla_sliced(
             q, k, v, qpos, kpos, causal, window, k_valid, scale, block_k

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.analysis.hotpath import hot_path
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
 from repro.models import layers as L
@@ -97,6 +98,7 @@ def valid_counts(lengths: jnp.ndarray, cache_len: int) -> jnp.ndarray:
 # core/kv_cache.py: "Block-table addressing"). Shapes stay static, so the
 # decode step remains ONE compiled executable.
 
+@hot_path
 def paged_write_token(buf: jnp.ndarray, new: jnp.ndarray, bt: jnp.ndarray,
                       lengths: jnp.ndarray) -> jnp.ndarray:
     """Scatter one token per slot into a block pool: buf [NB, bs, ...],
@@ -123,6 +125,7 @@ def paged_gather(buf: jnp.ndarray, bt: jnp.ndarray) -> jnp.ndarray:
     return g.reshape((b, mb * buf.shape[1]) + buf.shape[2:])
 
 
+@hot_path
 def paged_write_chunk(buf: jnp.ndarray, new: jnp.ndarray, bt: jnp.ndarray,
                       lengths: jnp.ndarray, t_new: jnp.ndarray) -> jnp.ndarray:
     """Scatter one per-slot K/V chunk straight into the block pool (chunked
@@ -146,6 +149,7 @@ def paged_write_chunk(buf: jnp.ndarray, new: jnp.ndarray, bt: jnp.ndarray,
     return buf.at[phys, pos % bs].set(new.astype(buf.dtype))
 
 
+@hot_path
 def paged_decode_attention(
     q: jnp.ndarray,  # [B, Hq, D]
     kbuf: jnp.ndarray,  # [NB, bs, Hkv, D] or [NB, bs, D] (shared-head latent)
