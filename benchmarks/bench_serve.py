@@ -23,6 +23,15 @@ allocation differ:
               token-identical to its batch-at-a-time engine, ZERO device
               cache reorders, and zero new KV device buffers (reserved
               bytes constant; CoW copies write into the static pool)
+  speculative the SAME trace served plain vs as LayerSkip draft/verify
+              windows (core/scheduler.py SpeculativeProfile) through the
+              paged+chunked scheduler. Gates: every speculative request
+              token-identical to the non-speculative engine, mean
+              accepted tokens per speculative slot-step > 1.5, strictly
+              fewer pool steps than the plain arm, >= 1.2x tokens/s
+              (one retry — wall clock), and zero new KV device buffers
+              (drafts write the static pool; rollback is a host-side
+              lengths rewind + block-table truncation)
 
 Rows report tokens/s, mean slot-occupancy, the continuous/fixed speedup,
 and the paged arm's reserved-KV-bytes ratio vs contiguous (the gate:
@@ -42,6 +51,8 @@ tax and paged reservations actually go unused under contiguous slots.
   PYTHONPATH=src python benchmarks/bench_serve.py --smoke
   PYTHONPATH=src python benchmarks/bench_serve.py --smoke --paged
   PYTHONPATH=src python benchmarks/bench_serve.py --smoke --paged --chunked
+  PYTHONPATH=src python benchmarks/bench_serve.py --smoke --paged --chunked \
+      --speculative
 """
 from __future__ import annotations
 
@@ -239,6 +250,136 @@ def _profile_mix_gate(n_requests: int = 12, arrival_rate: float = 200.0,
     return ok, stats
 
 
+def _speculative_gate(n_requests: int = 12, arrival_rate: float = 200.0,
+                      seed: int = 0, verbose: bool = True,
+                      attempts: int = 1):
+    """The speculative leg: serve the SAME greedy Poisson trace twice
+    through the paged+chunked scheduler — once plain, once with every
+    request wearing a SpeculativeProfile (LayerSkip draft/verify windows)
+    — and check (1) every speculative request is token-identical to the
+    non-speculative engine, (2) the full model keeps enough draft tokens
+    that speculative slot-steps commit > 1.5 tokens on average, (3) the
+    speculative arm takes strictly fewer pool steps, (4) zero new KV
+    device buffers (drafts write the static pool; rejection rollback is
+    a host-side lengths rewind + block-table truncation), and (5) the
+    step savings survive the draft overhead: >= 1.2x tokens/s wall
+    clock. Only (5) reads the clock, so only (5) is retried.
+    Returns (ok, stats)."""
+    import time
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import engine
+    from repro.core.scheduler import Scheduler
+
+    model, params = _smoke_model()
+    cfg = model.config
+    max_new_cap = 32  # long enough decodes for the window to amortize
+    exit_layer, n_draft = 1, 4
+    prof = data_mod.PAPER_PROFILES[PROFILE]
+
+    def trace(speculative: bool):
+        reqs = serve.poisson_trace(
+            prof, n_requests, pad_to=PAD_TO, max_new_cap=max_new_cap,
+            vocab_size=cfg.vocab_size, arrival_rate=arrival_rate, seed=seed,
+        )
+        if speculative:
+            serve.apply_profile_mix(reqs, "speculative",
+                                    exit_layer=exit_layer, n_draft=n_draft)
+        return reqs
+
+    serve.warmup(model, params, slots=SLOTS, pad_to=PAD_TO,
+                 max_new_cap=max_new_cap, paged=True, block_size=BLOCK_SIZE,
+                 num_blocks=NUM_BLOCKS, chunked=True,
+                 prefill_budget=PREFILL_BUDGET, speculative=True,
+                 exit_layer=exit_layer, n_draft=n_draft)
+
+    for attempt in range(attempts):
+        arms = {}
+        for name, speculative in (("plain", False), ("speculative", True)):
+            sched = Scheduler(
+                model, params, slots=SLOTS, pad_to=PAD_TO,
+                max_new_cap=max_new_cap, paged=True, block_size=BLOCK_SIZE,
+                num_blocks=NUM_BLOCKS, chunked=True,
+                prefill_budget=PREFILL_BUDGET,
+                base_key=jax.random.PRNGKey(seed),
+            )
+            reserved_before = sched.pool.reserved_bytes
+            t0 = time.perf_counter()
+            done = sched.run(trace(speculative))
+            wall = time.perf_counter() - t0
+            arms[name] = dict(
+                sched=sched, wall=wall,
+                tokens={d.rid: list(d.tokens) for d in done},
+                tokens_per_s=sum(len(d.tokens) for d in done) / max(wall, 1e-9),
+                steps=sched.n_decode_steps,
+                reserved_delta=sched.pool.reserved_bytes - reserved_before,
+            )
+
+        mismatches = []
+        for r in trace(False):  # fresh copy: sched.run consumed the lists
+            got = arms["speculative"]["tokens"][r.rid]
+            prompt = jnp.asarray(np.asarray(r.prompt, np.int32)[None, :])
+            ref = engine.generate(model, params, prompt,
+                                  max_new_tokens=r.max_new)
+            want = [int(t) for t in np.asarray(ref["tokens"])[0]]
+            if got != want:  # exact length too: max_new must not overshoot
+                mismatches.append(r.rid)
+
+        sp = arms["speculative"]["sched"]
+        tokens_per_slot_step = (sp.n_spec_committed
+                                / max(sp.n_spec_slot_steps, 1))
+        acceptance = sp.n_spec_accepted / max(sp.n_spec_drafted, 1)
+        speedup = (arms["speculative"]["tokens_per_s"]
+                   / max(arms["plain"]["tokens_per_s"], 1e-9))
+        stats = dict(
+            n_done=len(arms["speculative"]["tokens"]),
+            wall_s=arms["speculative"]["wall"],
+            spec_steps=sp.n_spec_steps,
+            spec_slot_steps=sp.n_spec_slot_steps,
+            spec_acceptance=acceptance,
+            spec_tokens_per_slot_step=tokens_per_slot_step,
+            spec_commit_hist={str(k): v for k, v
+                              in sorted(sp.spec_commit_hist.items())},
+            steps_speculative=arms["speculative"]["steps"],
+            steps_plain=arms["plain"]["steps"],
+            preemptions=sp.n_preemptions,
+            reserved_delta=arms["speculative"]["reserved_delta"],
+            speedup=speedup,
+            token_identical=not mismatches,
+            mismatches=mismatches,
+        )
+        det_ok = (
+            stats["n_done"] == n_requests
+            and not mismatches
+            and arms["speculative"]["tokens"] == arms["plain"]["tokens"]
+            and stats["spec_steps"] >= 1
+            and tokens_per_slot_step > 1.5
+            and stats["steps_speculative"] < stats["steps_plain"]
+            and stats["reserved_delta"] == 0
+        )
+        ok = det_ok and speedup >= 1.2
+        if verbose:
+            print(f"plain:       {arms['plain']['tokens_per_s']:8.1f} tok/s  "
+                  f"steps={stats['steps_plain']}")
+            print(f"speculative: "
+                  f"{arms['speculative']['tokens_per_s']:8.1f} tok/s  "
+                  f"steps={stats['steps_speculative']}  "
+                  f"spec_steps={stats['spec_steps']}  "
+                  f"acceptance={acceptance:.3f}  "
+                  f"tokens/slot-step={tokens_per_slot_step:.2f}  "
+                  f"commit_hist={stats['spec_commit_hist']}  "
+                  f"preemptions={stats['preemptions']}  "
+                  f"reserved_delta={stats['reserved_delta']}B  "
+                  f"speedup={speedup:.2f}x  "
+                  f"token-mismatches={mismatches}")
+        if ok or not det_ok or attempt == attempts - 1:
+            return ok, stats
+        print("speedup gate missed; retrying once (wall-clock noise)")
+    return ok, stats
+
+
 def _paged_decode_no_growth():
     """Satellite gate, delegated to repro.analysis.trace_audit (the
     generalization of the hand-rolled HLO scan this bench used to carry):
@@ -289,6 +430,8 @@ def _snapshot(n_requests: int = N_REQUESTS, arrival_rate: float = 200.0,
     )
     lowered.pop("_pool")
     recompile_fails = trace_audit.audit_recompiles(model, params)
+    _, spec_stats = _speculative_gate(arrival_rate=arrival_rate, seed=seed,
+                                      verbose=False)
 
     def clean(v):
         if isinstance(v, dict):
@@ -309,7 +452,13 @@ def _snapshot(n_requests: int = N_REQUESTS, arrival_rate: float = 200.0,
             "prefill_budget": PREFILL_BUDGET, "n_requests": n_requests,
             "arrival_rate": arrival_rate, "seed": seed,
         },
-        "arms": {name: clean(m) for name, m in r.items()},
+        "arms": {
+            **{name: clean(m) for name, m in r.items()},
+            # structural spec fields are the trajectory; `speedup` is wall
+            # clock and drifts with the host like the other wall_s fields
+            "speculative": clean({k: v for k, v in spec_stats.items()
+                                  if k != "mismatches"}),
+        },
         "derived": clean({
             "continuous_speedup":
                 ct["tokens_per_s"] / max(fx["tokens_per_s"], 1e-9),
@@ -318,6 +467,7 @@ def _snapshot(n_requests: int = N_REQUESTS, arrival_rate: float = 200.0,
             "token_identical": {
                 "paged_vs_continuous": toks["paged"] == toks["continuous"],
                 "chunked_vs_paged": toks["chunked"] == toks["paged"],
+                "speculative_vs_engine": spec_stats["token_identical"],
             },
         }),
         "analysis": {
@@ -361,6 +511,22 @@ def bench() -> list[Row]:
          f"p50 {ck['admission_stall_p50_ms']:.1f}ms vs paged "
          f"{pg['admission_stall_p50_ms']:.1f}ms, "
          f"token-identical={chunk_equiv}"),
+    ]) + _speculative_rows()
+
+
+def _speculative_rows() -> list[Row]:
+    """Fig 8's trajectory row, folded in from the retired standalone
+    bench_layerskip harness: LayerSkip self-speculative decoding now runs
+    through the serving pool, so the measured point is the pool A/B
+    rather than a batch-at-a-time loop."""
+    _, sp = _speculative_gate(verbose=False)
+    return emit([
+        ("serve/speculative_pool", sp["wall_s"] * 1e6,
+         f"{sp['speedup']:.2f}x tok/s vs plain pool  "
+         f"steps {sp['steps_plain']} -> {sp['steps_speculative']}  "
+         f"acceptance={sp['spec_acceptance']:.2f}  "
+         f"tokens/slot-step={sp['spec_tokens_per_slot_step']:.2f}  "
+         f"token-identical={sp['token_identical']} (lossless wrt greedy)"),
     ])
 
 
@@ -379,6 +545,14 @@ def main(argv=None) -> int:
                          "the paged pool, gated on token identity vs the "
                          "batch engines and on the beam reorder allocating "
                          "zero new KV device buffers")
+    ap.add_argument("--speculative", action="store_true",
+                    help="run ONLY the speculative draft/verify leg "
+                         "(requires --paged --chunked): the same greedy "
+                         "trace served plain vs as LayerSkip windows, "
+                         "gated on token identity vs the non-speculative "
+                         "engine, >1.5 accepted tokens per speculative "
+                         "slot-step, fewer pool steps, zero new KV device "
+                         "buffers, and >=1.2x tok/s")
     ap.add_argument("--n-requests", type=int, default=N_REQUESTS)
     ap.add_argument("--arrival-rate", type=float, default=200.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -392,6 +566,8 @@ def main(argv=None) -> int:
         ap.error("--chunked requires --paged")
     if args.profile_mix and not (args.paged and args.chunked):
         ap.error("--profile-mix requires --paged --chunked")
+    if args.speculative and not (args.paged and args.chunked):
+        ap.error("--speculative requires --paged --chunked")
 
     if args.snapshot:
         import json
@@ -417,6 +593,22 @@ def main(argv=None) -> int:
                           "FAIL: need every profile token-identical to its "
                           "batch engine, zero device cache reorders, and "
                           "zero new KV device buffers"))
+        return 0 if ok else 1
+
+    if args.speculative:
+        # token identity, acceptance, step counts and reserved bytes are
+        # deterministic; only the tok/s speedup reads the wall clock, and
+        # _speculative_gate retries only that part
+        ok, _ = _speculative_gate(seed=args.seed,
+                                  arrival_rate=args.arrival_rate,
+                                  attempts=2 if args.smoke else 1)
+        if not args.smoke:
+            return 0
+        print("SMOKE " + ("PASS" if ok else
+                          "FAIL: need speculative token-identical to the "
+                          "non-speculative engine at >1.5 accepted tokens "
+                          "per slot-step, fewer pool steps, zero new KV "
+                          "device buffers, and >=1.2x tok/s"))
         return 0 if ok else 1
 
     if args.paged:

@@ -9,9 +9,10 @@ Modules ↔ paper artifacts:
   bench_attention     Fig 5 (SDPA / flash attention)
   bench_compile       Fig 6/7 (static KV cache vs recompile; Obs #4 reorder)
   bench_quant         §4.2 (AutoQuant int8)
-  bench_layerskip     Fig 8 (self-speculative decoding)
   bench_hstu          §4.1.1 (fused pointwise attention scaling)
   bench_serve         Obs #2 (continuous batching vs fixed-slot serving A/B)
+                      + Fig 8 (LayerSkip self-speculative decoding, served
+                      as SpeculativeProfile draft/verify windows)
   bench_roofline      Fig 9 (three-term roofline, + dry-run table if present)
 """
 from __future__ import annotations
@@ -28,7 +29,6 @@ MODULES = [
     "bench_attention",
     "bench_compile",
     "bench_quant",
-    "bench_layerskip",
     "bench_hstu",
     "bench_seamless",
     "bench_serve",

@@ -35,6 +35,10 @@ HOT_PATHS = frozenset({
     # PjitFunction object)
     "repro.core.engine.decode_step",
     "repro.core.engine.mixed_step",
+    # the speculative step pair: drafts + multi-token verification run
+    # once per pool step while a SpeculativeProfile request is resident
+    "repro.core.engine.verify_step",
+    "repro.core.layerskip.draft_window",
 })
 
 

@@ -2,9 +2,11 @@
 
 The AST lint (Layer 1) reads source; this module reads what XLA will
 actually run. It lowers the serving executables — ``engine.prefill``,
-``engine.decode_step``, ``engine.mixed_step``, contiguous and paged —
-for the same smoke configuration ``benchmarks/bench_serve.py`` serves,
-and asserts four invariants on the lowered StableHLO:
+``engine.decode_step``, ``engine.mixed_step``, plus the speculative
+pair ``layerskip.draft_window`` / ``engine.verify_step``, contiguous
+and paged — for the same smoke configuration
+``benchmarks/bench_serve.py`` serves, and asserts four invariants on
+the lowered StableHLO:
 
 - **donation coverage** (:func:`audit_donation`): every non-exempt
   argument leaf at least ``min_bytes`` big is donated AND the module
@@ -48,6 +50,10 @@ MAX_NEW_CAP = 64
 BLOCK_SIZE = 16
 NUM_BLOCKS = 14
 PREFILL_BUDGET = 4
+# speculative-step geometry (SpeculativeProfile defaults; the smoke arch
+# has 2 layers, so exit_layer=1 is the only valid early exit)
+EXIT_LAYER = 1
+N_DRAFT = 4
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
@@ -253,12 +259,14 @@ def _cache_sizes(fns: Dict[str, object]) -> Dict[str, int]:
 def serving_jits() -> Dict[str, object]:
     """The jitted executables whose cache sizes a serving trace may
     legitimately grow while warming — and must NOT grow afterwards."""
-    from repro.core import engine, kv_cache
+    from repro.core import engine, kv_cache, layerskip
 
     return {
         "engine.prefill": engine.prefill,
         "engine.decode_step": engine.decode_step,
         "engine.mixed_step": engine.mixed_step,
+        "engine.verify_step": engine.verify_step,
+        "layerskip.draft_window": layerskip.draft_window,
         "kv_cache.write_slot": kv_cache.write_slot,
         "kv_cache.reset_slots": kv_cache.reset_slots,
         "kv_cache.append_block": kv_cache.append_block,
@@ -278,7 +286,9 @@ def audit_recompiles(model, params, *, slots: int = SLOTS,
     a second, different trace (new lengths, arrivals, prompts) through a
     FRESH scheduler of the same geometry — if jit cache keys are stable,
     the second trace compiles nothing: every per-executable cache size
-    stays exactly where warming left it."""
+    stays exactly where warming left it. The trace alternates plain and
+    speculative requests so the draft/verify pair is held to the same
+    zero-recompile bar as the rest of the hot path."""
     from repro.launch import serve
     from repro.training import data as data_mod
 
@@ -289,6 +299,10 @@ def audit_recompiles(model, params, *, slots: int = SLOTS,
             prof, n_requests, pad_to=pad_to, max_new_cap=max_new_cap,
             vocab_size=model.config.vocab_size, arrival_rate=200.0,
             seed=seed,
+        )
+        serve.apply_profile_mix(
+            reqs, "greedy,speculative",
+            exit_layer=EXIT_LAYER, n_draft=N_DRAFT,
         )
         serve.run_scheduler(
             model, params, reqs, slots=slots, pad_to=pad_to,
@@ -324,7 +338,7 @@ def lower_serving(model, params, *, paged: bool, slots: int = SLOTS,
     the lowered signatures are exactly what serving replays."""
     import jax.numpy as jnp
 
-    from repro.core import engine
+    from repro.core import engine, layerskip
     from repro.core.slot_pool import BlockPool, SlotPool
 
     max_len = pad_to + max_new_cap + 1
@@ -349,6 +363,20 @@ def lower_serving(model, params, *, paged: bool, slots: int = SLOTS,
             jnp.zeros((slots,), jnp.int32),
             jnp.zeros((slots,), jnp.int32),
         )
+    # the speculative step pair serves BOTH pool kinds (contiguous
+    # verify is a masked window scatter, paged reuses the mixed-step
+    # write/gather machinery)
+    out["draft_window"] = layerskip.draft_window.lower(
+        model, EXIT_LAYER, N_DRAFT, params, pool.cache,
+        jnp.zeros((slots,), jnp.int32), jnp.zeros((slots,), jnp.int32),
+        jnp.zeros((slots,), jnp.int32),
+    )
+    out["verify_step"] = engine.verify_step.lower(
+        model, params, pool.cache,
+        jnp.zeros((slots, N_DRAFT + 1), jnp.int32),
+        jnp.zeros((slots,), jnp.int32),
+        jnp.zeros((slots,), jnp.int32),
+    )
     out["_pool"] = pool
     return out
 
@@ -403,11 +431,11 @@ def run_trace_audit(verbose: bool = False,
     # - L.unembed computes logits in f32 by upcasting the
     #   [vocab, d_model] table (softmax/sampling numerics; the standard
     #   logits-in-f32 discipline) — allowed in every executable;
-    # - the MIXED step's chunk lanes gather each slot's pages
-    #   ([slots, table_width*block_size]) and flash attention
+    # - the MIXED and VERIFY steps' multi-token lanes gather each slot's
+    #   pages ([slots, table_width*block_size]) and flash attention
     #   accumulates its online softmax in f32 per KV block
     #   (kernels/ops.py), so that gather shape shows up as a transient
-    #   bf16->f32 convert. Allowed for mixed_step ONLY: the decode
+    #   bf16->f32 convert. Allowed for those two ONLY: the decode
     #   executable must never touch a full-gather-shaped tensor at all
     #   (enforced separately by paged_growth_patterns).
     # Everything else — above all any KV-pool-shaped convert — must
@@ -417,9 +445,9 @@ def run_trace_audit(verbose: bool = False,
     for name, low in lowered16.items():
         label = f"bf16/{name}"
         say(f"lowered {label}")
-        allow16 = (unembed_f32,) if name != "mixed_step" else (
-            unembed_f32, gather_f32,
-        )
+        allow16 = (unembed_f32, gather_f32) if name in (
+            "mixed_step", "verify_step",
+        ) else (unembed_f32,)
         fails += audit_dtypes(low, allow=allow16, label=label)
 
     if include_recompiles:

@@ -17,6 +17,11 @@ scheduler in core/scheduler.py):
                     ``t_new`` tokens in the same step — decode slots by 1,
                     a prefilling slot by a prompt chunk — so admission
                     work interleaves with decoding (chunked prefill).
+- ``verify_step`` — one jitted multi-token verification program
+                    (speculative decoding, both pool kinds): every slot
+                    scores its drafted window in a single full-model
+                    forward and returns per-lane logits, so a pool step
+                    can commit a VARIABLE number of tokens per slot.
 
 Decoding strategies are NOT separate loops any more: they are
 ``DecodingProfile`` specs (core/profiles.py) driven by ONE loop,
@@ -114,6 +119,29 @@ def mixed_step(model: Model, params, cache, tokens, t_new, lengths):
     # mixed-mode forward already gathered each slot's last valid lane
     # before the unembed (the vocab projection runs on one lane per slot)
     return logits[:, 0], cache
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def verify_step(model: Model, params, cache, tokens, t_new, lengths):
+    """One speculative verification step over the whole pool: tokens [B, C]
+    carries each slot's window — lane 0 the last committed token, lanes
+    1..t_new-1 the drafted continuation (t_new = 1 is a plain decode lane,
+    t_new = 0 an idle row). One full-model forward scores EVERY lane:
+    returns per-lane next-token logits [B, C, V] (lane j's logits sample
+    the token at position lengths+j+1) plus the donated cache. ``lengths``
+    [B] is the authoritative per-slot write position from the scheduler's
+    host state, pinned inside the executable exactly like ``mixed_step``.
+    The device cache ends the step with the whole window written (accepted
+    or not); rejected suffixes are rewound HOST-side — block-table
+    truncation on paged pools, a lengths rewind on contiguous ones — so no
+    device gather or cleanup program ever runs. ONE compiled executable
+    per (B, C) signature: every draft-length geometry warms once and
+    replays forever."""
+    cache = {**cache, "lengths": lengths}
+    logits, cache, _ = model.forward(
+        params, {"tokens": tokens, "t_new": t_new}, cache=cache, mode="verify"
+    )
+    return logits, cache
 
 
 # --------------------------------------------------------------------------

@@ -102,6 +102,38 @@ into index manipulation (vLLM's PagedAttention insight):
   that block (``copy_block``, one block-sized donated device copy) for
   all but the last owner; full common-prefix blocks stay shared for the
   group's whole lifetime because writes never revisit them.
+
+Speculative windows over block tables
+-------------------------------------
+Speculative decoding (core/profiles.py ``SpeculativeProfile`` ->
+core/scheduler.py ``_step_speculative``) makes a slot's kv length move
+by a VARIABLE stride: each step writes an (n_draft + 1)-lane window —
+``layerskip.draft_window`` drafts into the REAL pool cache,
+``engine.verify_step`` rescores and overwrites the same lanes through
+``paged_write_chunk``/``write_window`` — then commits only the prefix
+the full model accepted. Both halves of the rollback are host-side:
+
+- **contiguous pool**: ``rewind`` below — swap in the committed
+  ``lengths`` array. The rejected lanes' K/V stays in the buffer but
+  beyond every validity mask, and the next window overwrites it in
+  place. No device program runs.
+- **paged pool**: ``BlockPool.truncate`` — pop the block-table suffix
+  past the block the NEXT write (logical position ``kv_len``) lands in,
+  mirroring ``ensure``'s growth convention so accept-then-truncate
+  composes with the next step's growth. Released blocks return to the
+  free-list (shared blocks just drop a reference); the kept tail
+  block's rejected lanes are masked by the validity window and
+  rewritten one position at a time on reuse, so — like eviction — NO
+  zeroing or copy program runs. Rollback costs a table edit plus the
+  ``rewind`` dict swap, never cache traffic, and allocates zero new KV
+  device buffers (tests/test_paged.py locks down free-list conservation
+  and dense-mirror read identity, partial-block tail included).
+
+A preempted speculative slot needs no special casing: replay re-prefills
+and re-decodes under the same per-(request, stream, token-index) keys,
+and since every committed token was sampled from full-model logits, the
+replayed stream is bit-identical whether or not (and where in a window)
+the preemption hit.
 """
 from __future__ import annotations
 

@@ -2,39 +2,47 @@
 
 Draft tokens are generated auto-regressively with only the first E
 transformer layers + the shared LM head (early exit); the draft window is
-then verified IN PARALLEL by one full forward ("extend" mode) over the
-window. Greedy acceptance makes the scheme lossless w.r.t. the full model
-under greedy decoding: every committed token is exactly what the full
-model would have produced.
+then verified IN PARALLEL by one full-model forward over the window
+(``engine.verify_step``, "verify" mode). Greedy acceptance makes the
+scheme lossless w.r.t. the full model under greedy decoding: every
+committed token is exactly what the full model would have produced.
 
 JAX adaptation notes (vs. the CUDA implementation the paper used):
-- the KV cache is functional, so "rollback on rejection" is just keeping
-  the pre-draft cache value and committing the verified cache with
-  ``lengths`` set to the accepted count (stale tail entries are masked/
-  overwritten by construction — see models/attention.py);
-- the draft pass writes a scratch cache; verification recomputes the
-  window for ALL layers from the committed cache (a simplification over
-  the paper's early-layer KV sharing — costs E/L extra FLOPs in the
-  verify step, bounded by ~25% for E = L/4, and keeps every cache
-  consistent without cross-pass aliasing);
+- drafting writes THE pool cache, not a scratch copy: draft writes land
+  only at positions >= the committed length, where the "stale tail is
+  masked by validity" discipline (models/attention.py) already makes
+  garbage harmless — and the verify step then overwrites the whole
+  window across every layer. That makes both executables linear in the
+  cache (draft -> verify -> host rewind), so BOTH donate it; "rollback
+  on rejection" is a host-side ``lengths`` rewind (contiguous) or a
+  block-table truncation (paged), never a device copy;
+- for layers < E the draft's K/V writes are exactly what the full model
+  would write (the first E layers are the same computation), so the
+  verify pass re-deriving them costs correctness nothing;
 - applies to attention-cache families (dense/moe/mla_moe/vlm). SSM/hybrid
   recurrent state cannot be rolled back by masking; DESIGN.md §4 notes
   this (their decode is already state-bounded, which shrinks LayerSkip's
   win anyway).
 
-Speedup model (reported by benchmarks/bench_layerskip.py):
-  tokens/step = accepted + 1 bonus;  cost/step = k·(E/L) + 1 full forward.
+:func:`draft_window` + ``engine.verify_step`` are also the serving pool's
+speculative step (core/scheduler.py, ``SpeculativeProfile``): per-slot
+``n_live`` widths let plain-sampling and speculative traffic ride the
+same two executables, and the same per-(request, token-index) sampling
+keys keep committed tokens bit-identical to plain decoding at any
+temperature. :func:`layerskip_generate` below is the batch-at-a-time
+engine on the same primitives (per-row commit, no batch-min barrier).
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import kv_cache
 from repro.models import layers as L
 from repro.models import transformer
 from repro.models.registry import Model
@@ -48,9 +56,14 @@ def early_exit_forward(
     n_layers: int,
     cache=None,
     mode: str = "decode",
+    advance: Optional[jnp.ndarray] = None,
 ):
     """Transformer forward through the first ``n_layers`` layers only, then
-    final-norm + (shared) LM head — the LayerSkip draft model."""
+    final-norm + (shared) LM head — the LayerSkip draft model. Supports
+    paged caches (the pool's shared block table is injected per layer,
+    like the full forward). ``advance`` [B] overrides the per-slot length
+    bump (default ``t``): the pool's draft loop freezes slots whose
+    window is exhausted by advancing them 0."""
     tokens = batch["tokens"]
     b, t = tokens.shape
     if mode == "train" or cache is None:
@@ -60,6 +73,7 @@ def early_exit_forward(
         lengths = cache["lengths"]
         positions = lengths[:, None] + jnp.arange(t)[None]
 
+    bt = cache.get("block_tables") if cache is not None else None
     x = L.embed(params["embed"], tokens)
     new_layers = []
     for i, lp in enumerate(params["layers"]):
@@ -67,10 +81,14 @@ def early_exit_forward(
             new_layers.append(cache["layers"][i] if cache is not None else None)
             continue
         lc = cache["layers"][i] if cache is not None else None
+        if bt is not None and lc is not None:
+            lc = dict(lc, bt=bt)
         x, nlc, _ = transformer.layer_forward(
             cfg, lp, x, layer=i, positions=positions, lengths=lengths,
             cache=lc, mode=mode,
         )
+        if bt is not None and nlc is not None:
+            nlc = {k: v for k, v in nlc.items() if k != "bt"}
         new_layers.append(nlc)
 
     x = L.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
@@ -80,46 +98,48 @@ def early_exit_forward(
         logits = L.dense(params["lm_head"], x).astype(jnp.float32)
     new_cache = None
     if cache is not None:
-        new_cache = {"lengths": cache["lengths"] + t, "layers": new_layers}
+        bump = advance if advance is not None else t
+        new_cache = {"lengths": cache["lengths"] + bump, "layers": new_layers}
+        if bt is not None:
+            new_cache["block_tables"] = bt
     return logits, new_cache
 
 
-# repro-lint: disable=DN001 — ``cache`` must NOT be donated: drafting
-# writes a scratch copy and the caller re-extends the ORIGINAL cache in
-# the verify step (and rolls back to it on draft rejection)
-@functools.partial(jax.jit, static_argnums=(0, 1, 4))
-def _draft_tokens(
-    model: Model, n_draft: int, params, cache, exit_layer: int, token0
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(4,))
+def draft_window(
+    model: Model, exit_layer: int, n_draft: int, params, cache, token0,
+    n_live, lengths,
 ):
-    """Greedy-draft ``n_draft`` tokens with the early-exit submodel,
-    writing a scratch copy of the cache (layers < E)."""
+    """Greedy-draft up to ``n_draft`` tokens per slot with the early-exit
+    submodel, writing straight into the (donated) pool cache. ``token0``
+    [B] is each slot's pending feed token; slot ``b`` drafts
+    ``n_live[b]`` tokens (0 = plain-decode or idle slot: it stays frozen
+    — its repeated write at the frozen position is masked garbage the
+    verify step overwrites). ``lengths`` [B] is the authoritative host
+    write position, pinned like ``mixed_step``. Returns ``(window
+    [B, n_draft+1], cache)`` — lane 0 is ``token0``, lanes 1..n_draft the
+    greedy drafts (frozen slots repeat their token past their width;
+    those lanes are never verified or committed). ONE executable per
+    (exit_layer, n_draft, B) signature."""
     cfg = model.config
+    cache = {**cache, "lengths": lengths}
 
-    def step(carry, _):
+    def step(carry, i):
         token, cache = carry
+        live = i < n_live  # [B]
         logits, cache = early_exit_forward(
             cfg, params, {"tokens": token[:, None]}, n_layers=exit_layer,
-            cache=cache, mode="decode",
+            cache=cache, mode="decode", advance=live.astype(jnp.int32),
         )
         nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        nxt = jnp.where(live, nxt, token)
         return (nxt, cache), nxt
 
-    (_, _), drafts = jax.lax.scan(step, (token0, cache), None, length=n_draft)
-    return drafts.T  # [B, n_draft]
-
-
-# repro-lint: disable=DN001 — ``cache`` must NOT be donated: on draft
-# rejection the loop rewinds to the PRE-verify cache (speculative
-# decoding keeps the original alive past this call by design)
-@functools.partial(jax.jit, static_argnums=(0,))
-def _verify(model: Model, params, cache, window_tokens):
-    """Full-model extend over [token0, d_1..d_k]; returns greedy
-    predictions [B, k+1] and the extended cache."""
-    logits, new_cache, _ = model.forward(
-        params, {"tokens": window_tokens}, cache=cache, mode="extend"
+    (_, cache), drafts = jax.lax.scan(
+        step, (token0, cache), jnp.arange(n_draft)
     )
-    preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return preds, new_cache
+    window = jnp.concatenate([token0[:, None], drafts.T], axis=1)
+    return window, cache
 
 
 def layerskip_generate(
@@ -134,6 +154,9 @@ def layerskip_generate(
     """Greedy LayerSkip generation. Returns tokens plus acceptance stats.
 
     Losslessness: committed tokens equal full-model greedy decoding.
+    Commit is per-row (``lengths`` is per-row state): a row with a
+    rejected draft no longer drags the whole batch down to its accepted
+    count — finished rows idle with a zero-width window.
     """
     from repro.core import engine as E
 
@@ -147,48 +170,55 @@ def layerskip_generate(
     logits, cache = E.prefill(
         model, params, prompt_tokens, prompt_lengths, max_len, None
     )
-    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    token = np.array(jnp.argmax(logits, axis=-1), np.int32)  # [B] (writable)
 
-    out = [token]
-    n_accepted_total = 0
-    n_rounds = 0
-    while len(out) < max_new_tokens:
-        k = min(n_draft, max_new_tokens - len(out))
-        drafts = _draft_tokens(model, k, params, cache, exit_layer, token)
-        window = jnp.concatenate([token[:, None], drafts], axis=1)  # [B, k+1]
-        preds, vcache = _verify(model, params, cache, window)
-        # accepted[i] = all draft tokens up to i matched the full model
-        match = preds[:, :-1] == drafts  # [B, k]
-        n_acc = jnp.minimum(
-            jnp.argmin(
-                jnp.concatenate([match, jnp.zeros((b, 1), bool)], axis=1), axis=1
-            ),
-            k,
-        )  # [B] accepted drafts per row
-        # batch-synchronous commit: accept the minimum across the batch
-        # (slot-independent commit requires ragged caches; batched spec
-        # decoding caveat, same trade the paper cites from Qian et al.)
-        a = int(jnp.min(n_acc))
-        commit = window[:, 1 : a + 1]  # the accepted draft tokens
-        bonus = preds[:, a]  # full-model token after the accepted prefix
-        # rewind: verified cache holds k+1 writes; keep prompt+out+ a +1
-        new_len = cache["lengths"] + a + 1
-        cache = {**vcache, "lengths": new_len}
-        for i in range(a):
-            out.append(commit[:, i])
-            if len(out) >= max_new_tokens:
-                break
-        if len(out) < max_new_tokens:
-            out.append(bonus)
-        token = out[-1]
-        n_accepted_total += a
+    out = np.zeros((b, max_new_tokens), np.int32)
+    out[:, 0] = token
+    emitted = np.ones((b,), np.int64)
+    kv_len = np.full((b,), tp, np.int64)  # next write position per row
+    n_rounds = n_drafted = n_accepted = 0
+    while (emitted < max_new_tokens).any():
+        remaining = max_new_tokens - emitted
+        w = np.where(remaining > 0,
+                     np.minimum(n_draft + 1, remaining), 0).astype(np.int32)
+        n_live = np.maximum(w - 1, 0).astype(np.int32)
+        lengths = jnp.asarray(kv_len, jnp.int32)
+        window, cache = draft_window(
+            model, exit_layer, n_draft, params, cache,
+            jnp.asarray(token), jnp.asarray(n_live), lengths,
+        )
+        logits, cache = E.verify_step(
+            model, params, cache, window, jnp.asarray(w), lengths,
+        )
+        preds, win = jax.device_get(
+            (jnp.argmax(logits, axis=-1).astype(jnp.int32), window)
+        )
+        for r in range(b):
+            if w[r] == 0:
+                continue
+            commits = 0
+            for j in range(int(w[r])):
+                tok = int(preds[r, j])
+                out[r, emitted[r]] = tok
+                emitted[r] += 1
+                commits += 1
+                token[r] = tok
+                # stop at the first draft the full model contradicts
+                # (the committed ``tok`` is the full model's correction)
+                if j + 1 >= int(w[r]) or tok != int(win[r, j + 1]):
+                    break
+            kv_len[r] += commits
+            n_drafted += int(n_live[r])
+            n_accepted += commits - 1
+        # host-side rollback of every rejected suffix: one lengths rewind
+        cache = kv_cache.rewind(cache, jnp.asarray(kv_len, jnp.int32))
         n_rounds += 1
 
-    tokens = jnp.stack(out[:max_new_tokens], axis=1)
+    tokens = jnp.asarray(out)
     return {
         "tokens": tokens,
         "n_rounds": n_rounds,
-        "acceptance": n_accepted_total / max(n_rounds * n_draft, 1),
+        "acceptance": n_accepted / max(n_drafted, 1),
         # first token comes from the prefill, not a draft/verify round
         "tokens_per_round": (tokens.shape[1] - 1) / max(n_rounds, 1),
     }

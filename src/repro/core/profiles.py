@@ -186,6 +186,36 @@ class SamplingProfile(DecodingProfile):
 
 
 # --------------------------------------------------------------------------
+# speculative (LayerSkip draft/verify) — multi-token pool steps
+# --------------------------------------------------------------------------
+
+@dataclass
+class SpeculativeProfile(SamplingProfile):
+    """Single-stream sampling whose pool steps commit a VARIABLE number
+    of tokens: each speculative step greedily drafts up to ``n_draft``
+    tokens with the first ``exit_layer`` layers (LayerSkip early exit,
+    ``core/layerskip.draft_window``), scores the whole window in ONE
+    full-model forward (``engine.verify_step``), commits the accepted
+    prefix plus the full model's correction token, and rewinds the
+    rejected KV suffix host-side (block-table truncation / a lengths
+    rewind — never a device program).
+
+    Every committed token is sampled from FULL-model logits under the
+    same per-(request, stream, token-index) key plain pool decoding
+    uses, so outputs are bit-identical to a non-speculative run at any
+    temperature — ``exit_layer``/``n_draft`` only move the
+    acceptance-rate/throughput trade-off, never the tokens. The serving
+    scheduler detects this subclass and routes the slot through its
+    draft/verify step (core/scheduler.py ``_step_speculative``); the
+    batch engines treat it as its ``SamplingProfile`` base. This is the
+    seam multi-head drafters (Medusa/EAGLE-style) plug into later: only
+    the draft executable changes."""
+
+    exit_layer: int = 1
+    n_draft: int = 4
+
+
+# --------------------------------------------------------------------------
 # beam search — the Seamless S-T/T-T strategy (paper Obs #4)
 # --------------------------------------------------------------------------
 

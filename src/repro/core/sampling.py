@@ -117,6 +117,43 @@ def sample_slots(
     return jnp.where(temperature <= 0.0, greedy_tok, sampled)
 
 
+@jax.jit
+def window_step_keys(
+    base_key: jax.Array,
+    rids: jnp.ndarray,  # [B]
+    steps: jnp.ndarray,  # [B, C] per-lane token indices
+    streams: Optional[jnp.ndarray] = None,  # [B]
+) -> jax.Array:
+    """Key per (slot, window lane): the speculative generalization of
+    :func:`slot_step_keys`. Lane ``j`` of slot ``b`` gets the key for
+    token index ``steps[b, j]`` of request ``rids[b]`` — the SAME key
+    that slot would use for that token under plain one-token-per-step
+    decoding, so committed tokens are bit-identical to the
+    non-speculative engine regardless of where window boundaries fall."""
+    req_keys = jax.vmap(lambda r: jax.random.fold_in(base_key, r))(rids)
+    if streams is None:
+        streams = jnp.zeros_like(rids)
+    req_keys = jax.vmap(jax.random.fold_in)(req_keys, streams)
+    return jax.vmap(jax.vmap(jax.random.fold_in, in_axes=(None, 0)))(
+        req_keys, steps
+    )
+
+
+@jax.jit
+def sample_window(
+    logits: jnp.ndarray,  # [B, C, V]
+    keys: jax.Array,  # [B, C] per-lane keys (stacked)
+    temperature: jnp.ndarray,  # [B]; 0 => greedy for that slot
+    top_p: jnp.ndarray,  # [B]; 1 => no nucleus filtering
+) -> jnp.ndarray:
+    """Per-lane :func:`sample_slots` over a verification window: every
+    lane of a slot samples with the request's (temperature, top_p) under
+    its own per-token key. Returns [B, C] sampled tokens."""
+    return jax.vmap(sample_slots, in_axes=(1, 1, None, None), out_axes=1)(
+        logits, keys, temperature, top_p
+    )
+
+
 # --------------------------------------------------------------------------
 # Beam search (Seamless profile, Obs #4)
 # --------------------------------------------------------------------------

@@ -69,6 +69,23 @@ into per-slot cross-attention cache rows, so enc-dec beam requests serve
 through the (contiguous) pool too. Preempting a group frees every slot
 and block it holds and replays it from scratch — token-identical, since
 profiles re-``init`` pure state and keys derive from (rid, stream, step).
+
+``SpeculativeProfile`` requests (LayerSkip self-speculative decoding,
+paper §4.3) generalize the pool step from one token per slot to a
+VARIABLE number: when a resident speculative slot still has >= 2 tokens
+of budget, the step becomes a draft+verify pair — greedy-draft up to
+``n_draft`` tokens per slot with the first ``exit_layer`` layers
+(``layerskip.draft_window``, writing straight into the pool cache), then
+verify the whole window with ONE full-model multi-token forward
+(``engine.verify_step``). Each lane's full-model logits are sampled
+under the per-(rid, stream, token-index) key that lane's token would use
+under plain decoding, so the committed stream is bit-identical to the
+non-speculative engine at ANY temperature; the accepted prefix plus the
+full model's correction token commit in one stride, and the rejected
+suffix is rolled back host-side (a ``lengths`` rewind; paged adds a
+block-table truncation — never a device gather or copy). Plain-sampling
+slots ride the same step with width-1 windows; resident groups force
+plain stepping (beam reorders and variable strides don't compose yet).
 """
 from __future__ import annotations
 
@@ -82,7 +99,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.hotpath import hot_path
-from repro.core import engine, kv_cache, profiles, sampling
+from repro.core import engine, kv_cache, layerskip, profiles, sampling
 from repro.core.prefill import ChunkCursor, ChunkedPrefill
 from repro.core.slot_pool import BlockPool, SlotPool
 from repro.models.registry import Model
@@ -267,6 +284,16 @@ class Scheduler:
         self.n_chunks = 0
         self.n_chunk_tokens = 0
         self.n_group_admissions = 0
+        # speculative decoding accounting: a "spec slot-step" is one slot
+        # carrying a >= 2-wide draft/verify window through one pool step;
+        # the histogram keys on tokens committed by that slot that step
+        # (1 = all drafts rejected, n_draft + 1 = whole window accepted)
+        self.n_spec_steps = 0  # pool steps that ran the draft+verify pair
+        self.n_spec_slot_steps = 0
+        self.n_spec_drafted = 0  # draft tokens proposed (window width - 1)
+        self.n_spec_accepted = 0  # draft tokens the full model kept
+        self.n_spec_committed = 0  # tokens committed by spec slot-steps
+        self.spec_commit_hist: Dict[int, int] = {}
         # cache-permutation accounting: device gathers (contiguous beam
         # fallback) vs pure host-side block-table permutations (paged beam)
         self.n_cache_reorders = 0
@@ -322,7 +349,39 @@ class Scheduler:
                 r.top_p = r.profile.top_p
                 if r.profile.eos_id is not None:
                     r.eos_id = r.profile.eos_id
+                if isinstance(r.profile, profiles.SpeculativeProfile):
+                    self._check_speculative(r.rid, r.profile)
             self.waiting.append(r)
+
+    def _check_speculative(
+        self, rid: int, prof: profiles.SpeculativeProfile
+    ) -> None:
+        """Submit-time validation of a speculative request against THIS
+        scheduler's model: drafting needs rollback-able attention caches
+        (the rejected window is undone by a lengths rewind / block-table
+        truncation — SSM/hybrid recurrent state cannot be masked away) and
+        a real early-exit point strictly inside the layer stack."""
+        cfg = self.model.config
+        if cfg.family not in ("dense", "moe", "mla_moe", "vlm"):
+            raise ValueError(
+                f"request {rid}: SpeculativeProfile needs rollback-able "
+                f"attention caches; family {cfg.family!r} is unsupported "
+                f"(DESIGN.md §4)"
+            )
+        if getattr(cfg, "scan_layers", False):
+            raise ValueError(
+                f"request {rid}: early-exit drafting slices the layer "
+                f"stack per layer; scan_layers models are unsupported"
+            )
+        if not 1 <= prof.exit_layer < cfg.n_layers:
+            raise ValueError(
+                f"request {rid}: exit_layer must be in "
+                f"[1, {cfg.n_layers - 1}], got {prof.exit_layer}"
+            )
+        if prof.n_draft < 1:
+            raise ValueError(
+                f"request {rid}: n_draft must be >= 1, got {prof.n_draft}"
+            )
 
     # ---- admission -------------------------------------------------------
     def _trim_prompt(self, prompt: np.ndarray) -> np.ndarray:
@@ -594,12 +653,15 @@ class Scheduler:
         self.n_preemptions += 1
 
     @hot_path
-    def _ensure_blocks(self) -> None:
+    def _ensure_blocks(self, extra: Optional[np.ndarray] = None) -> None:
         """Before a paged decode step every active slot must own the block
         its next token writes into — EXCLUSIVELY, for group streams whose
         write-cursor block may be shared (copy-on-write unshare via
-        ``ensure_writable``). Residents grow oldest-first; when the pool
-        runs dry the youngest lowest-priority resident is preempted
+        ``ensure_writable``). ``extra`` [slots] widens a slot's target by
+        that many positions past ``kv_len`` (a speculative step's draft +
+        verify writes reach ``kv_len + w - 1``; groups never step
+        speculatively). Residents grow oldest-first; when the pool runs
+        dry the youngest lowest-priority resident is preempted
         (repeatedly if needed). Terminates: BlockPool guarantees one
         worst-case single request fits, and ``submit`` enforces the same
         for whole groups, so the oldest resident can always run alone."""
@@ -624,7 +686,10 @@ class Scheduler:
             else:
                 if ent.slot not in self.active:
                     continue  # already preempted while growing an older one
-                while not self.pool.ensure(ent.slot, ent.kv_len):
+                tgt = ent.kv_len
+                if extra is not None:
+                    tgt = tgt + extra[ent.slot]
+                while not self.pool.ensure(ent.slot, tgt):
                     victim = self._victim()
                     self._preempt(victim)
                     if victim is ent:
@@ -686,13 +751,180 @@ class Scheduler:
                 self._temp[slot] = 0.0  # free slots decode greedy garbage
         return done
 
+    # ---- speculative decoding (SpeculativeProfile windows) ----------------
+    def _spec_ready(self) -> bool:
+        """A draft+verify step pays off only when some resident slot can
+        commit >= 2 tokens this step. Resident groups force plain
+        stepping (beam's per-step KV permutation and variable-stride
+        commits don't compose yet — see ROADMAP); pending chunk cursors
+        already routed to the mixed step before this is consulted."""
+        if self.groups:
+            return False
+        return any(
+            isinstance(st.req.profile, profiles.SpeculativeProfile)
+            and st.req.max_new - st.n_generated >= 2
+            for st in self.active.values()
+        )
+
+    def _window_widths(self) -> np.ndarray:
+        """Per-slot verify-window width for one speculative step. A
+        speculative slot gets ``min(n_draft + 1, budget left)`` — >= 1
+        while active, so a variable-stride commit can never overshoot
+        ``max_new`` and the window never writes past the pool's
+        ``max_len`` sizing. Plain-sampling slots ride along with width 1
+        (their lane-0 sample is exactly the plain decode step's); free
+        slots get 0 and are frozen through draft AND verify."""
+        w = np.zeros((self.slots,), np.int32)
+        for slot, st in self.active.items():
+            left = st.req.max_new - st.n_generated
+            if isinstance(st.req.profile, profiles.SpeculativeProfile):
+                w[slot] = min(st.req.profile.n_draft + 1, left)
+            else:
+                w[slot] = 1
+        return w
+
+    @hot_path
+    def _step_speculative(self) -> List[ServeRequest]:
+        """One draft+verify pool step (LayerSkip, paper §4.3): greedy-
+        draft up to K tokens per speculative slot with the early-exit
+        submodel straight into the pool cache, verify every slot's window
+        with ONE full-model multi-token forward, sample each lane under
+        the key its token index would use under plain decoding, commit
+        the accepted prefix plus the full model's correction token, and
+        roll back every rejected suffix host-side (``kv_cache.rewind`` +
+        paged block-table truncation — no device gather or copy ever
+        runs). The step runs at the LARGEST resident (exit_layer,
+        n_draft) geometry — ONE executable pair per geometry — and
+        narrower slots are frozen via per-slot ``n_live`` widths."""
+        if self.paged:
+            # draft writes reach kv_len + w - 2, verify kv_len + w - 1:
+            # grow every slot's blocks for its whole window up front (may
+            # preempt — widths are rebuilt below for the survivors)
+            w = self._window_widths()
+            self._ensure_blocks(extra=np.maximum(w - 1, 0))
+            if not self.active:
+                return []  # everything preempted back to the queue
+        w = self._window_widths()
+        k_step, e_step = 0, 1
+        for st in self.active.values():
+            prof = st.req.profile
+            if isinstance(prof, profiles.SpeculativeProfile):
+                k_step = max(k_step, prof.n_draft)
+                e_step = max(e_step, prof.exit_layer)
+        if k_step == 0:  # every speculative slot was preempted away
+            return self._step_decode()
+        n_live = np.maximum(w - 1, 0)
+        base = np.zeros((self.slots,), np.int32)
+        for slot, st in self.active.items():
+            base[slot] = st.kv_len
+        self.pool.sync()
+        lengths = jnp.asarray(base)
+        window, cache = layerskip.draft_window(
+            self.model, e_step, k_step, self.params, self.pool.cache,
+            jnp.asarray(self._token), jnp.asarray(n_live), lengths,
+        )
+        logits, cache = engine.verify_step(
+            self.model, self.params, cache, window, jnp.asarray(w), lengths,
+        )
+        self.pool.cache = cache
+        samples, win = self._sample_window(logits, window)
+        self._record_step_metrics()
+        self.n_spec_steps += 1
+        now = self._now()
+        done = self._commit_window(samples, win, w, now)
+        # host-side rollback of every rejected suffix: ONE pool-wide
+        # lengths rewind (+ block-table truncation when paged), built
+        # after evictions so freed slots rewind to zero
+        new_len = np.zeros((self.slots,), np.int32)
+        for slot, st in self.active.items():
+            new_len[slot] = st.kv_len
+            self.pool.truncate(slot, st.kv_len)
+        self.pool.cache = kv_cache.rewind(self.pool.cache, jnp.asarray(new_len))
+        return done
+
+    @hot_path
+    def _sample_window(self, logits, window):
+        """Sample every verify lane under its own (rid, stream, token
+        index) key — lane ``j`` of slot ``b`` holds that request's token
+        index ``n_generated + j``, the SAME key plain decoding would fold
+        in for it — and ship (samples, window) to the host as the step's
+        ONE device_get."""
+        if not self._temp.any():  # all-greedy pool: skip the top-p pipeline
+            return jax.device_get((sampling.greedy(logits), window))
+        steps = jnp.asarray(self._ngen)[:, None] + jnp.arange(
+            logits.shape[1]
+        )[None]
+        keys = sampling.window_step_keys(
+            self.base_key, jnp.asarray(self._rid), steps,
+            jnp.asarray(self._stream),
+        )
+        samples = sampling.sample_window(
+            logits, keys, jnp.asarray(self._temp), jnp.asarray(self._top_p)
+        )
+        return jax.device_get((samples, window))
+
+    def _commit_window(
+        self, samples: np.ndarray, win: np.ndarray, w: np.ndarray, now: float
+    ) -> List[ServeRequest]:
+        """Variable-stride commit. Slot ``b`` commits ``samples[b, 0..m]``
+        where ``m`` is the first lane whose full-model sample contradicts
+        the draft (that sample IS the full model's correction token), the
+        last lane, or an EOS / max_new finish — whichever comes first, so
+        EOS inside an accepted window truncates exactly like
+        token-at-a-time decoding. Width-1 (plain) slots reduce to
+        ``_commit_decode``. ``kv_len`` grows by the commit count: the
+        verify step wrote lanes ``0..m-1``'s K/V at ``kv_len..kv_len+m-1``
+        (committed lanes matched the window entries whose K/V they are),
+        and the correction token's K/V lands in the NEXT step's lane 0."""
+        self._harvest_stalls(now)
+        done: List[ServeRequest] = []
+        for slot, st in list(self.active.items()):
+            wi = int(w[slot])
+            if wi <= 0:
+                continue
+            eos = self._eos(st.req)
+            commits, token, fin = 0, 0, False
+            for j in range(wi):
+                token = int(samples[slot, j])
+                st.req.tokens.append(token)
+                st.req.t_tokens.append(now)
+                st.n_generated += 1
+                commits += 1
+                fin = st.finished(token, eos)
+                # stop at the first draft the full model contradicts
+                if fin or j + 1 >= wi or token != int(win[slot, j + 1]):
+                    break
+            st.kv_len += commits
+            self._token[slot] = token
+            self._ngen[slot] = st.n_generated
+            if wi > 1:
+                self.n_spec_slot_steps += 1
+                self.n_spec_drafted += wi - 1
+                self.n_spec_accepted += commits - 1
+                self.n_spec_committed += commits
+                self.spec_commit_hist[commits] = (
+                    self.spec_commit_hist.get(commits, 0) + 1
+                )
+            if fin:
+                st.req.t_done = now
+                self.finished.append(st.req)
+                done.append(st.req)
+                del self.active[slot]
+                self.pool.evict(slot)
+                self._temp[slot] = 0.0  # free slots decode greedy garbage
+        return done
+
     @hot_path
     def step(self) -> List[ServeRequest]:
         """One pool-wide step; returns requests finished by it. With
-        pending chunk cursors the step is the mixed-step executable;
-        otherwise (and always when not chunked) the plain decode step."""
+        pending chunk cursors the step is the mixed-step executable; with
+        a speculative resident that still has >= 2 tokens of budget (and
+        no resident groups) it is the draft+verify pair; otherwise (and
+        always when not chunked) the plain decode step."""
         if self.chunked and len(self.chunk_mgr):
             return self._step_mixed()
+        if self._spec_ready():
+            return self._step_speculative()
         return self._step_decode()
 
     @hot_path

@@ -110,6 +110,11 @@ class SlotPool(_PoolBase):
     def sync(self) -> None:
         """No host-side tables to flush (BlockPool signature parity)."""
 
+    def truncate(self, slot: int, kv_len: int) -> None:
+        """Nothing to release: contiguous slots reserve their whole row,
+        so a speculative rewind is the pool-wide ``lengths`` reset the
+        scheduler already ships (BlockPool signature parity)."""
+
     def reset(self) -> None:
         """Evict everything (serve-loop restart)."""
         self.cache = kv_cache.reset_slots(self.cache, jnp.ones((self.slots,), bool))
@@ -288,6 +293,28 @@ class BlockPool(_PoolBase):
         )
         self.n_cow_copies += 1
         return True
+
+    def truncate(self, slot: int, kv_len: int) -> None:
+        """Release the block-table suffix a rejected speculative window
+        leaves behind: keep exactly the blocks through the one logical
+        position ``kv_len`` (the slot's next write) lands in — the same
+        convention as :meth:`ensure`, so accept-then-truncate composes
+        with the next step's growth — and return the rest to the
+        free-list. Host-only, mirroring ``ensure``'s growth direction:
+        the stale K/V inside the dropped (and kept-partial-tail) blocks
+        is masked by the validity window and overwritten one position at
+        a time on reuse, so NO device zeroing program runs — rewind
+        costs a table edit, never cache traffic. Shared blocks (a
+        sibling stream still owns them) only drop a reference."""
+        keep = kv_len // self.block_size + 1
+        owned = self._owned[slot]
+        while len(owned) > keep:
+            phys = owned.pop()
+            self.block_tables[slot, len(owned)] = 0
+            self._ref[phys] -= 1
+            if self._ref[phys] == 0:
+                heapq.heappush(self._free_blocks, phys)
+            self._bt_dirty = True
 
     def share(self, dst: int, src: int) -> None:
         """Admit ``dst`` as a copy-free clone of ``src``: same block table,

@@ -21,7 +21,11 @@ new request never freezes resident decoding behind a full prefill.
 the Obs #4 KV reorder done as a host-side block-table permutation under
 ``--paged``, contrastive requests 2-slot cond/uncond groups — the
 paper's Seamless and Chameleon T-I decoding strategies served through
-the SAME continuous-batching pool as plain sampling.
+the SAME continuous-batching pool as plain sampling. A ``speculative``
+kind in the mix serves those requests as LayerSkip draft/verify windows
+(core/scheduler.py ``SpeculativeProfile``): up to ``--n-draft`` + 1
+tokens commit per pool step, token-identical to plain decoding, with
+acceptance-rate and tokens-per-step counters in the report.
 
 Reported per request: TTFT (arrival -> first token), TPOT (mean inter-
 token), e2e latency; aggregate: tokens/s, mean slot-occupancy (the
@@ -158,11 +162,17 @@ def apply_profile_mix(
     guidance: float = 2.0,
     uncond_token: int = 0,
     mask_offset: Optional[int] = None,
+    exit_layer: int = 1,
+    n_draft: int = 4,
 ) -> List[ServeRequest]:
     """Cycle decoding profiles over a trace: ``mix`` is a comma list of
-    kinds (``greedy`` | ``beam`` | ``contrastive``) assigned round-robin
-    by request order — deterministic, so A/B arms see identical work.
-    ``greedy`` leaves the request on the per-slot sampling path."""
+    kinds (``greedy`` | ``beam`` | ``contrastive`` | ``speculative``)
+    assigned round-robin by request order — deterministic, so A/B arms
+    see identical work. ``greedy`` leaves the request on the per-slot
+    sampling path; ``speculative`` keeps the request's own
+    (temperature, top_p) — draft/verify windows are bit-identical to
+    plain decoding at any temperature, so the mix only changes HOW MANY
+    tokens each pool step commits."""
     kinds = [k.strip() for k in mix.split(",") if k.strip()]
     for i, r in enumerate(requests):
         kind = kinds[i % len(kinds)]
@@ -174,6 +184,11 @@ def apply_profile_mix(
             r.profile = profiles.ContrastiveProfile(
                 uncond_token=uncond_token, guidance=guidance,
                 mask_offset=mask_offset,
+            )
+        elif kind == "speculative":
+            r.profile = profiles.SpeculativeProfile(
+                temperature=r.temperature, top_p=r.top_p,
+                eos_id=r.eos_id, exit_layer=exit_layer, n_draft=n_draft,
             )
         else:
             raise ValueError(f"unknown profile kind {kind!r}")
@@ -247,6 +262,21 @@ def run_scheduler(
             cache_reorders=sched.n_cache_reorders,  # contiguous beam fallback
             block_permutes=sched.n_block_permutes,  # paged beam reorders
         )
+    if sched.n_spec_steps:
+        m.update(
+            spec_steps=sched.n_spec_steps,
+            spec_acceptance=(
+                sched.n_spec_accepted / max(sched.n_spec_drafted, 1)
+            ),
+            # mean tokens committed per speculative slot-step (> 1 means
+            # the draft/verify pair beat one-token-at-a-time stepping)
+            spec_tokens_per_step=(
+                sched.n_spec_committed / max(sched.n_spec_slot_steps, 1)
+            ),
+            spec_commit_hist={
+                str(k): v for k, v in sorted(sched.spec_commit_hist.items())
+            },
+        )
     if paged:
         token_bytes = sched.pool.reserved_bytes / max(
             sched.pool.num_blocks * sched.pool.block_size, 1
@@ -278,12 +308,16 @@ def warmup(model, params, *, slots: int, pad_to: int, max_new_cap: int,
            paged: bool = False, block_size: int = 16,
            num_blocks: Optional[int] = None, chunked: bool = False,
            prefill_budget: Optional[int] = None,
-           profile_mix: bool = False, n_beams: int = 2) -> None:
+           profile_mix: bool = False, n_beams: int = 2,
+           speculative: bool = False, exit_layer: int = 1,
+           n_draft: int = 4) -> None:
     """Compile the serving executables (single-slot prefill, pool decode
     step, slot scatter — plus block copy/length scatter when paged, plus
     the mixed step when chunked) before any timed run. ``profile_mix``
     additionally warms the slot-group path: a beam group (beam-step top_k,
-    CoW block copy / contiguous reorder) and a contrastive pair."""
+    CoW block copy / contiguous reorder) and a contrastive pair.
+    ``speculative`` warms the draft/verify pair at the given
+    (exit_layer, n_draft) geometry."""
     sched = Scheduler(
         model, params, slots=slots, pad_to=pad_to, max_new_cap=max_new_cap,
         paged=paged, block_size=block_size, num_blocks=num_blocks,
@@ -302,6 +336,16 @@ def warmup(model, params, *, slots: int, pad_to: int, max_new_cap: int,
         reqs.append(ServeRequest(
             rid=3, prompt=rng.integers(0, 8, size=3), max_new=2,
             profile=profiles.ContrastiveProfile(uncond_token=0),
+        ))
+    if speculative:
+        # max_new > n_draft + 1 so the warm run takes at least one full
+        # draft+verify step at the serving window geometry
+        reqs.append(ServeRequest(
+            rid=4, prompt=rng.integers(0, 8, size=3),
+            max_new=min(n_draft + 2, max_new_cap),
+            profile=profiles.SpeculativeProfile(
+                exit_layer=exit_layer, n_draft=n_draft,
+            ),
         ))
     sched.run(reqs)
 
@@ -330,13 +374,18 @@ def main(argv=None):
                          "--block-size")
     ap.add_argument("--profile-mix", default=None,
                     help="comma list of decoding profiles cycled over the "
-                         "trace (greedy | beam | contrastive), e.g. "
-                         "'greedy,beam,contrastive' — beam/contrastive "
-                         "requests serve as slot GROUPS")
+                         "trace (greedy | beam | contrastive | "
+                         "speculative), e.g. 'greedy,beam,contrastive' — "
+                         "beam/contrastive requests serve as slot GROUPS, "
+                         "speculative ones decode draft/verify windows")
     ap.add_argument("--n-beams", type=int, default=2,
                     help="beams per beam-profile request (--profile-mix)")
     ap.add_argument("--guidance", type=float, default=2.0,
                     help="contrastive guidance scale (--profile-mix)")
+    ap.add_argument("--exit-layer", type=int, default=1,
+                    help="early-exit draft depth for speculative requests")
+    ap.add_argument("--n-draft", type=int, default=4,
+                    help="draft tokens per speculative window")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrivals per second; 0 = all at t=0")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -372,12 +421,16 @@ def main(argv=None):
             reqs, args.profile_mix, n_beams=args.n_beams,
             beam_eos_id=args.eos_id if args.eos_id is not None else 2,
             guidance=args.guidance, mask_offset=mask_offset,
+            exit_layer=args.exit_layer, n_draft=args.n_draft,
         )
+    mix_kinds = [k.strip() for k in (args.profile_mix or "").split(",")]
     warmup(model, params, slots=args.batch_slots, pad_to=pad_to,
            max_new_cap=args.max_new, paged=args.paged,
            block_size=args.block_size, num_blocks=args.num_blocks,
            chunked=args.chunked, prefill_budget=args.prefill_budget,
-           profile_mix=bool(args.profile_mix), n_beams=args.n_beams)
+           profile_mix=bool(args.profile_mix), n_beams=args.n_beams,
+           speculative="speculative" in mix_kinds,
+           exit_layer=args.exit_layer, n_draft=args.n_draft)
     m = run_scheduler(
         model, params, reqs, slots=args.batch_slots, pad_to=pad_to,
         max_new_cap=args.max_new, eos_id=args.eos_id, policy=args.policy,
@@ -413,6 +466,11 @@ def main(argv=None):
               f"block permutes={m['block_permutes']}"
               + (f" | cow copies={m['cow_copies']}" if "cow_copies" in m
                  else ""))
+    if "spec_steps" in m:
+        print(f"[serve/{mode}] spec steps={m['spec_steps']} | "
+              f"acceptance={m['spec_acceptance']:.2f} | "
+              f"tokens/step={m['spec_tokens_per_step']:.2f} | "
+              f"commit hist={m['spec_commit_hist']}")
     return m
 
 

@@ -17,6 +17,11 @@ Modes:
                straight into the slot's blocks, then chunk-query flash
                attention against the slot's existing paged K/V plus the
                chunk itself (intra-chunk causal via query positions).
+- ``verify``:  speculative verification window: same per-slot-``t_new``
+               write+attend program as ``mixed`` (paged pools reuse it
+               verbatim; contiguous pools get a masked window scatter),
+               but the caller keeps EVERY lane's logits — one full-model
+               forward scores a whole drafted window per slot.
 """
 from __future__ import annotations
 
@@ -73,6 +78,25 @@ def write_extend(buf: jnp.ndarray, new: jnp.ndarray, idx: jnp.ndarray) -> jnp.nd
         return jax.lax.dynamic_update_slice(b, n, (i,) + (0,) * (b.ndim - 1))
 
     return jax.vmap(one)(buf, new, idx)
+
+
+def write_window(buf: jnp.ndarray, new: jnp.ndarray, lengths: jnp.ndarray,
+                 t_new: jnp.ndarray) -> jnp.ndarray:
+    """Masked multi-token scatter for verify windows on contiguous
+    caches: new [B, C, ...] lands at per-slot offsets ``lengths`` [B],
+    lane ``j`` written iff ``j < t_new[b]``. Invalid lanes are parked at
+    position ``S`` and dropped by the scatter (mode="drop"), so — unlike
+    :func:`write_extend`'s ``dynamic_update_slice`` — an overhanging
+    window can never clamp-shift its start onto committed entries, and
+    no two lanes ever target the same position."""
+    s, c = buf.shape[1], new.shape[1]
+    pos = lengths[:, None] + jnp.arange(c)[None]  # [B, C]
+    pos = jnp.where(jnp.arange(c)[None] < t_new[:, None], pos, s)
+
+    def one(b, n, p):
+        return b.at[p].set(n.astype(b.dtype), mode="drop")
+
+    return jax.vmap(one)(buf, new, pos)
 
 
 def write_slot_row(buf: jnp.ndarray, row: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
@@ -311,7 +335,7 @@ def attention(
             q, k, v, q_positions=positions, k_positions=positions,
             causal=not bidirectional, window=window, impl=impl,
         )
-    elif mode in ("decode", "mixed") and "bt" in cache:
+    elif mode in ("decode", "mixed", "verify") and "bt" in cache:
         if window is not None:
             raise NotImplementedError("paged cache unsupported on ring/window")
         if SP_MESH is not None:
@@ -335,6 +359,9 @@ def attention(
             # chunks) into its blocks, then chunk-query flash attention over
             # the slot's gathered logical view — prior blocks AND the chunk
             # just written, intra-chunk causality via the query positions.
+            # Verify mode is the same device program over a speculative
+            # window (per-slot t_new = window width); only the caller
+            # differs — it keeps every lane's logits instead of the last.
             new_cache = {
                 "k": paged_write_chunk(cache["k"], k, bt, lengths, t_new),
                 "v": paged_write_chunk(cache["v"], v, bt, lengths, t_new),
@@ -351,6 +378,27 @@ def attention(
             )
     elif mode == "mixed":
         raise ValueError("mixed mode requires a paged (block-table) cache")
+    elif mode == "verify":
+        # contiguous verify window: masked multi-token write at the slot
+        # offsets, then window-query flash over the cache — intra-window
+        # causality via the query positions, per-slot width via t_new.
+        if window is not None:
+            raise NotImplementedError("verify unsupported on ring/window caches")
+        if SP_MESH is not None:
+            raise NotImplementedError(
+                "verify unsupported under sequence-parallel shard_map"
+            )
+        s = cache["k"].shape[1]
+        new_cache = {
+            "k": write_window(cache["k"], k, lengths, t_new),
+            "v": write_window(cache["v"], v, lengths, t_new),
+        }
+        kpos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        k_valid = jnp.arange(s)[None] < (lengths + t_new)[:, None]
+        out = ops.flash_attention(
+            q, new_cache["k"], new_cache["v"], q_positions=positions,
+            k_positions=kpos, causal=True, k_valid=k_valid, impl=impl,
+        )
     elif mode == "decode":
         if SP_MESH is not None and window is None:
             out, new_cache = _sp_decode(cache, k[:, 0], v[:, 0], q[:, 0], lengths)
@@ -496,7 +544,7 @@ def mla_attention(
                     cache["latent"], jnp.concatenate([c_kv, k_rope], axis=-1)
                 ),
             }
-    elif mode in ("decode", "extend", "mixed"):
+    elif mode in ("decode", "extend", "mixed", "verify"):
         paged = "bt" in cache
         if paged and mode == "extend":
             raise NotImplementedError("extend unsupported on paged caches")
@@ -513,7 +561,7 @@ def mla_attention(
                 "bt": bt,
             }
             s = bt.shape[1] * cache["latent"].shape[1]  # logical view length
-        elif paged:  # mixed: per-slot latent chunk straight into the blocks
+        elif paged:  # mixed/verify: per-slot latent chunk into the blocks
             bt = cache["bt"]
             new_cache = {
                 "latent": paged_write_chunk(
@@ -528,6 +576,12 @@ def mla_attention(
             idx = lengths % s
             new_cache = {
                 "latent": write_decode(cache["latent"], latent_new[:, 0], idx),
+            }
+            lat = new_cache["latent"]
+        elif mode == "verify":  # contiguous verify: masked window write
+            s = cache["latent"].shape[1]
+            new_cache = {
+                "latent": write_window(cache["latent"], latent_new, lengths, t_new),
             }
             lat = new_cache["latent"]
         else:
@@ -564,7 +618,7 @@ def mla_attention(
         else:  # extend / mixed: chunk-query flash over the logical view
             k_eff = lat  # paged mixed: gathered view (amortized over chunk)
             v_eff = lat[:, :, : m.kv_lora_rank]  # V = slice
-            ext = t_new if mode == "mixed" else t  # per-slot or uniform width
+            ext = t_new if mode in ("mixed", "verify") else t  # per-slot or uniform
             kpos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
             k_valid = jnp.arange(s)[None] < (lengths + ext)[:, None]
             ctx_lat = ops.flash_attention(

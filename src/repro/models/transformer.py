@@ -149,9 +149,10 @@ def forward(
     else:
         lengths = cache["lengths"]
         positions = lengths[:, None] + jnp.arange(t)[None]
-    # mixed (chunked-prefill) step: per-slot chunk widths [B]; lanes beyond
-    # t_new[b] are padding (writes hit the sink block, outputs discarded)
-    t_new = batch.get("t_new") if mode == "mixed" else None
+    # mixed (chunked-prefill) / verify (speculative window) steps: per-slot
+    # widths [B]; lanes beyond t_new[b] are padding (writes hit the sink
+    # block / get dropped, outputs discarded)
+    t_new = batch.get("t_new") if mode in ("mixed", "verify") else None
 
     x = L.embed(params["embed"], tokens)
     aux_total = jnp.float32(0.0)
@@ -221,7 +222,7 @@ def forward(
         # decode: one token per slot.
         if mode == "prefill":
             new_len = batch.get("prompt_lengths", jnp.full((b,), t, jnp.int32))
-        elif mode == "mixed":  # per-slot chunk widths (0 for idle rows)
+        elif mode in ("mixed", "verify"):  # per-slot widths (0 = idle row)
             new_len = cache["lengths"] + t_new
         else:  # decode / extend
             new_len = cache["lengths"] + t

@@ -12,7 +12,11 @@ Locks down the BlockPool contract from core/slot_pool.py / core/kv_cache.py
   including after block recycling across slots, and pool-wide garbage
   writes from freed slots land only in the sink block;
 - the scheduler applies back-pressure (queue + preempt, never corrupt)
-  when the pool runs out of blocks mid-decode.
+  when the pool runs out of blocks mid-decode;
+- a rejected speculative window's rollback (ISSUE 7: block-table
+  truncation + free, no device program) conserves the free-list and
+  leaves the pool read-identical to the dense mirror, including when
+  the commit point lands mid-block (partial-block tail).
 
 Property tests run under hypothesis when installed (tests/_hyp.py shim)
 and as fixed-seed unit sequences otherwise.
@@ -124,6 +128,46 @@ class _Mirror:
         self.dev_lengths[slot] = 0
         return True
 
+    def spec_window(self, rng) -> bool:
+        """A draft/verify window plus its rejection rollback, exactly as
+        the speculative scheduler ships it: grow blocks for the whole
+        window, write w lanes through the block table (the verify step's
+        paged_write_chunk), commit a random prefix m in [1, w], then
+        truncate the block-table suffix the rejected tail leaves behind.
+        The committed prefix must read back exactly — including when the
+        commit lands mid-block (partial-block tail) — and every released
+        block must return to the free-list (check() conservation)."""
+        pool = self.pool
+        w_max = 5
+        live = [s for s, n in self.kv_len.items() if n + w_max <= MAX_LEN]
+        if not live:
+            return False
+        slot = int(rng.choice(live))
+        n = self.kv_len[slot]
+        w = int(rng.integers(1, w_max + 1))
+        if not pool.ensure(slot, n + w - 1):  # grow for lanes n..n+w-1
+            return False
+        pool.sync()
+        new = rng.normal(size=(SLOTS, w, 1, 2)).astype(np.float32)
+        t_new = np.zeros((SLOTS,), np.int32)
+        t_new[slot] = w  # idle lanes route to the sink block, as in verify
+        lengths = np.array(self.dev_lengths)
+        lengths[slot] = n
+        layer = pool.cache["layers"][0]
+        pool.cache["layers"][0] = {
+            "k": A.paged_write_chunk(layer["k"], jnp.asarray(new),
+                                     pool.cache["block_tables"],
+                                     jnp.asarray(lengths),
+                                     jnp.asarray(t_new)),
+            "v": layer["v"],
+        }
+        m = int(rng.integers(1, w + 1))  # commit prefix, reject the rest
+        self.dense[slot, n:n + m] = new[slot, :m]
+        self.kv_len[slot] = n + m
+        self.dev_lengths[slot] = n + m
+        pool.truncate(slot, n + m)  # next write position, as the scheduler
+        return True
+
     # ---- invariants ------------------------------------------------------
     def check(self) -> None:
         pool = self.pool
@@ -166,8 +210,10 @@ def _run_ops(ops, seed: int) -> None:
                 mirror.decode_step(rng)
             else:
                 mirror.evict(rng)
-        else:
+        elif op == 2:
             mirror.evict(rng)
+        else:
+            mirror.spec_window(rng)
         mirror.check()
     # drain: every block must come home
     for slot in list(mirror.kv_len):
@@ -180,14 +226,65 @@ def test_block_pool_fixed_sequences():
     """Hypothesis-free coverage of the same invariant machinery."""
     _run_ops([0, 0, 1, 1, 2, 0, 1, 2, 2, 0, 0, 0, 1, 1, 1, 2, 1, 2], seed=0)
     _run_ops([0, 1, 1, 1, 1, 1, 1, 1, 1, 0, 2, 0, 1, 2], seed=1)
+    # speculative windows interleaved with decode/evict (ISSUE 7 satellite)
+    _run_ops([0, 0, 3, 1, 3, 3, 2, 0, 3, 1, 3, 2, 3, 3], seed=2)
 
 
 @settings(max_examples=25, deadline=None)
-@given(hst.lists(hst.integers(min_value=0, max_value=2), max_size=40),
+@given(hst.lists(hst.integers(min_value=0, max_value=3), max_size=40),
        hst.integers(min_value=0, max_value=2**31 - 1))
 def test_block_pool_property(ops, seed):
-    """Random assign/step/evict interleavings preserve every invariant."""
+    """Random assign/step/evict/spec-window interleavings preserve every
+    invariant — in particular a rejected speculative window's truncation
+    conserves the block free-list and leaves the pool read-identical to
+    the dense mirror."""
     _run_ops(ops, seed)
+
+
+def test_truncate_releases_rejected_window_suffix():
+    """Deterministic ISSUE 7 satellite: a window spanning three blocks,
+    committed one token in, must release the overhang block, keep the
+    next-write block (ensure's convention, so accept-then-truncate
+    composes with the next step's growth), read back exactly, and keep
+    decoding across the freed-and-reacquired boundary."""
+    pool = BlockPool(_FakeModel(), SLOTS, MAX_LEN, block_size=BS, num_blocks=NB)
+    mirror = _Mirror(pool)
+    rng = np.random.default_rng(7)
+    slot = pool.acquire()
+    row, k = _mk_row(rng, 3)
+    pool.assign(slot, row, 3)
+    mirror.dense[slot, :3] = k[0, :3]
+    mirror.kv_len[slot] = 3
+    mirror.dev_lengths[slot] = 3
+    # a 6-lane verify window at positions 3..8 crosses into block 2
+    assert pool.ensure(slot, 3 + 6 - 1)
+    assert len(pool.owned_blocks(slot)) == 3
+    free_before = len(pool._free_blocks)
+    pool.sync()
+    new = rng.normal(size=(SLOTS, 6, 1, 2)).astype(np.float32)
+    t_new = np.zeros((SLOTS,), np.int32)
+    t_new[slot] = 6
+    layer = pool.cache["layers"][0]
+    pool.cache["layers"][0] = {
+        "k": A.paged_write_chunk(layer["k"], jnp.asarray(new),
+                                 pool.cache["block_tables"],
+                                 jnp.asarray(mirror.dev_lengths),
+                                 jnp.asarray(t_new)),
+        "v": layer["v"],
+    }
+    # the full model rejects everything past the first lane: commit 1
+    mirror.dense[slot, 3:4] = new[slot, :1]
+    mirror.kv_len[slot] = 4
+    mirror.dev_lengths[slot] = 4
+    pool.truncate(slot, 4)
+    assert len(pool.owned_blocks(slot)) == 2  # next-write block kept
+    assert len(pool._free_blocks) == free_before + 1
+    mirror.check()
+    # the rewound suffix is immediately reusable: decode across the
+    # freed-and-reacquired block boundary
+    for _ in range(5):
+        mirror.decode_step(rng)
+        mirror.check()
 
 
 @settings(max_examples=25, deadline=None)
