@@ -39,6 +39,11 @@ HOT_PATHS = frozenset({
     # once per pool step while a SpeculativeProfile request is resident
     "repro.core.engine.verify_step",
     "repro.core.layerskip.draft_window",
+    # replica routing (core/router.py) adds NO new device programs: every
+    # replica replays the executables above (one shared jit cache keyed by
+    # pool geometry). Its per-round host code IS hot, and is decorated
+    # directly: ReplicaRouter._round and the scheduler's two-phase
+    # step_begin/step_finish split it drives.
 })
 
 

@@ -86,6 +86,24 @@ suffix is rolled back host-side (a ``lengths`` rewind; paged adds a
 block-table truncation — never a device gather or copy). Plain-sampling
 slots ride the same step with width-1 windows; resident groups force
 plain stepping (beam reorders and variable strides don't compose yet).
+
+**Replica routing** (core/router.py) scales this pool horizontally — the
+paper's fleet-scaling argument that serving "billions of users" is won at
+the serving layer, not inside one device's kernels. A ``ReplicaRouter``
+owns N independent schedulers behind one shared queue; this class exposes
+the hooks it drives: ``normalize``/``admissible``/``try_admit`` (placement
+with back-pressure), ``drain_waiting`` (replica-level preemption bounces
+requests back to the SHARED queue front), ``drain_finished``, and the
+two-phase ``step_begin``/``step_finish`` split (dispatch every replica's
+device work before syncing any — JAX async dispatch overlaps replicas on
+multi-device hosts). ``busy_s`` accumulates the wall seconds this
+replica's device work + admissions actually took, which is the
+device-busy denominator the router's aggregate-throughput accounting
+uses. Because every committed token is sampled under pure per-(rid,
+stream, token-index) keys folded from a SHARED ``base_key``, a request's
+output is bit-identical no matter which replica serves it, how often it
+is preempted, or who its batch mates are — replica placement is a pure
+scheduling decision, never a numerics decision.
 """
 from __future__ import annotations
 
@@ -231,6 +249,8 @@ class Scheduler:
         prefill_budget: Optional[int] = None,
         base_key: Optional[jax.Array] = None,
         clock=time.perf_counter,
+        replica_id: int = 0,
+        device=None,
     ):
         if policy not in ("continuous", "fixed"):
             raise ValueError(f"unknown policy {policy!r}")
@@ -249,6 +269,13 @@ class Scheduler:
         self.paged = paged
         self.base_key = base_key if base_key is not None else jax.random.PRNGKey(0)
         self.clock = clock
+        # replica identity (core/router.py): which data-parallel pool this
+        # is, and the device its cache/keys are pinned to (None = default
+        # placement). The ROUTER's base_key must be shared across replicas
+        # so per-(rid, stream, token-index) sampling keys — and therefore
+        # tokens — are replica-placement-independent.
+        self.replica_id = replica_id
+        self.device = device
 
         if paged:
             self.pool = BlockPool(
@@ -257,6 +284,11 @@ class Scheduler:
             )
         else:
             self.pool = SlotPool(model, slots, self.max_len)
+        if device is not None:
+            # pin this replica's KV pool + sampling key source to its own
+            # device; params are placed by the router (sharding.place_replica)
+            self.pool.cache = jax.device_put(self.pool.cache, device)
+            self.base_key = jax.device_put(self.base_key, device)
         self.chunked = chunked
         self.chunk_mgr: Optional[ChunkedPrefill] = None
         if chunked:
@@ -310,6 +342,12 @@ class Scheduler:
         self.occupancy_trace: List[float] = []
         self.block_occupancy_trace: List[float] = []
         self.peak_used_blocks = 0
+        # wall seconds this replica's own work took (steps + router-driven
+        # admissions): the device-busy denominator of the router's
+        # aggregate-throughput accounting — on a one-device host replicas
+        # time-share the device, so max-over-replicas busy_s is the wall a
+        # real fleet (one device per replica) would take
+        self.busy_s = 0.0
         self._seq = 0  # admission order (preemption picks the youngest)
         self._t0 = self.clock()  # run() rebases; timestamps are offsets
 
@@ -317,41 +355,49 @@ class Scheduler:
         return self.clock() - self._t0
 
     # ---- request intake --------------------------------------------------
+    def normalize(self, r: ServeRequest) -> ServeRequest:
+        """Submit-time validation + canonicalization of one request against
+        THIS scheduler's geometry (the router calls it once against replica
+        0 — all replicas share one geometry, so one pass covers the fleet):
+        caps ``max_new``, rejects groups that could never fit, and collapses
+        single-stream SamplingProfiles onto the vectorized per-slot path."""
+        r.max_new = min(r.max_new, self.max_new_cap)
+        s_n = profiles.n_streams_of(r.profile)
+        if s_n > self.slots:
+            raise ValueError(
+                f"request {r.rid} needs a slot group of {s_n} streams "
+                f"but the pool has only {self.slots} slots"
+            )
+        if self.paged and s_n * self.pool.max_blocks > self.pool.num_blocks - 1:
+            # the preemption ladder's termination guarantee: the oldest
+            # resident must always be able to run ALONE, worst case
+            raise ValueError(
+                f"request {r.rid}: a {s_n}-stream group can need up to "
+                f"{s_n * self.pool.max_blocks} blocks but the pool has "
+                f"{self.pool.num_blocks - 1} usable"
+            )
+        if s_n == 1 and isinstance(r.profile, profiles.SamplingProfile):
+            # single-stream profiles collapse onto the vectorized
+            # per-slot sampling path (same numerics, no group machinery)
+            if r.profile.sampler is not None:
+                raise ValueError(
+                    "SamplingProfile.sampler callables are a batch-"
+                    "engine escape hatch; the pool serves the "
+                    "(temperature, top_p, eos_id) spec"
+                )
+            r.temperature = r.profile.temperature
+            r.top_p = r.profile.top_p
+            if r.profile.eos_id is not None:
+                r.eos_id = r.profile.eos_id
+            if isinstance(r.profile, profiles.SpeculativeProfile):
+                self._check_speculative(r.rid, r.profile)
+        return r
+
     def submit(self, requests: List[ServeRequest]) -> None:
         # arrival order first; within an arrival instant, higher priority
         # first (stable — submission order breaks remaining ties)
         for r in sorted(requests, key=lambda r: (r.t_arrival, -r.priority)):
-            r.max_new = min(r.max_new, self.max_new_cap)
-            s_n = profiles.n_streams_of(r.profile)
-            if s_n > self.slots:
-                raise ValueError(
-                    f"request {r.rid} needs a slot group of {s_n} streams "
-                    f"but the pool has only {self.slots} slots"
-                )
-            if self.paged and s_n * self.pool.max_blocks > self.pool.num_blocks - 1:
-                # the preemption ladder's termination guarantee: the oldest
-                # resident must always be able to run ALONE, worst case
-                raise ValueError(
-                    f"request {r.rid}: a {s_n}-stream group can need up to "
-                    f"{s_n * self.pool.max_blocks} blocks but the pool has "
-                    f"{self.pool.num_blocks - 1} usable"
-                )
-            if s_n == 1 and isinstance(r.profile, profiles.SamplingProfile):
-                # single-stream profiles collapse onto the vectorized
-                # per-slot sampling path (same numerics, no group machinery)
-                if r.profile.sampler is not None:
-                    raise ValueError(
-                        "SamplingProfile.sampler callables are a batch-"
-                        "engine escape hatch; the pool serves the "
-                        "(temperature, top_p, eos_id) spec"
-                    )
-                r.temperature = r.profile.temperature
-                r.top_p = r.profile.top_p
-                if r.profile.eos_id is not None:
-                    r.eos_id = r.profile.eos_id
-                if isinstance(r.profile, profiles.SpeculativeProfile):
-                    self._check_speculative(r.rid, r.profile)
-            self.waiting.append(r)
+            self.waiting.append(self.normalize(r))
 
     def _check_speculative(
         self, rid: int, prof: profiles.SpeculativeProfile
@@ -613,6 +659,65 @@ class Scheduler:
             else:
                 self._admit_one(cand, now)
 
+    # ---- router hooks (core/router.py) -----------------------------------
+    @property
+    def has_work(self) -> bool:
+        """True while any resident (slot, group, or chunk cursor) needs a
+        step — the router steps a replica only while this holds."""
+        return bool(
+            self.active or self.groups
+            or (self.chunk_mgr is not None and len(self.chunk_mgr))
+        )
+
+    def free_capacity(self) -> int:
+        """Load signal for placement: free blocks when paged (the binding
+        resource Fig 1 identifies), free slots otherwise."""
+        return self.pool.n_free_blocks if self.paged else self.pool.n_free
+
+    def admissible(self, req: ServeRequest) -> bool:
+        """Public admission gate (the router's no-stall invariant checks
+        it): would ``try_admit`` succeed right now?"""
+        return self._admissible(req)
+
+    def try_admit(self, req: ServeRequest, now: float) -> bool:
+        """Router placement hook: admit ``req`` (already ``normalize``d by
+        the router's shared submit) if this replica has room, else refuse —
+        back-pressure the router answers by spilling to the next replica.
+        Admission work (a prefill program, or a chunk-cursor enqueue) is
+        this replica's own work, so it lands in ``busy_s``."""
+        if not self._admissible(req):
+            return False
+        t = self.clock()
+        if profiles.n_streams_of(req.profile) > 1:
+            self._admit_one_group(req, now)
+        elif self.chunked and not req.extra_inputs:
+            self._admit_one_chunked(req, now)
+        else:
+            self._admit_one(req, now)
+        self.busy_s += self.clock() - t
+        return True
+
+    def drain_waiting(self) -> List[ServeRequest]:
+        """Reclaim requests this replica preempted back to ITS queue front
+        (front-first order preserved) so the router can requeue them at the
+        SHARED queue's front — a preempted request may resume on ANY
+        replica; per-(rid, stream, token-index) keys keep its tokens
+        identical wherever the replay lands."""
+        out = list(self.waiting)
+        self.waiting.clear()
+        return out
+
+    def drain_finished(self) -> List[ServeRequest]:
+        """Hand completed requests to the router (finish-order preserved)."""
+        out = self.finished
+        self.finished = []
+        return out
+
+    def rebase(self, t0: float) -> None:
+        """Pin this replica's clock origin (the router rebases every
+        replica to ONE t0 so merged TTFT/TPOT timestamps are comparable)."""
+        self._t0 = t0
+
     # ---- paged back-pressure ---------------------------------------------
     def _victim(self):
         """Preemption victim: the YOUNGEST request of the LOWEST priority
@@ -784,18 +889,15 @@ class Scheduler:
         return w
 
     @hot_path
-    def _step_speculative(self) -> List[ServeRequest]:
-        """One draft+verify pool step (LayerSkip, paper §4.3): greedy-
-        draft up to K tokens per speculative slot with the early-exit
-        submodel straight into the pool cache, verify every slot's window
-        with ONE full-model multi-token forward, sample each lane under
-        the key its token index would use under plain decoding, commit
-        the accepted prefix plus the full model's correction token, and
-        roll back every rejected suffix host-side (``kv_cache.rewind`` +
-        paged block-table truncation — no device gather or copy ever
-        runs). The step runs at the LARGEST resident (exit_layer,
-        n_draft) geometry — ONE executable pair per geometry — and
-        narrower slots are frozen via per-slot ``n_live`` widths."""
+    def _begin_speculative(self):
+        """Dispatch phase of one draft+verify pool step (LayerSkip, paper
+        §4.3): greedy-draft up to K tokens per speculative slot with the
+        early-exit submodel straight into the pool cache, then verify
+        every slot's window with ONE full-model multi-token forward —
+        both dispatched WITHOUT a host sync. The step runs at the LARGEST
+        resident (exit_layer, n_draft) geometry — ONE executable pair per
+        geometry — and narrower slots are frozen via per-slot ``n_live``
+        widths."""
         if self.paged:
             # draft writes reach kv_len + w - 2, verify kv_len + w - 1:
             # grow every slot's blocks for its whole window up front (may
@@ -803,7 +905,7 @@ class Scheduler:
             w = self._window_widths()
             self._ensure_blocks(extra=np.maximum(w - 1, 0))
             if not self.active:
-                return []  # everything preempted back to the queue
+                return None  # everything preempted back to the queue
         w = self._window_widths()
         k_step, e_step = 0, 1
         for st in self.active.values():
@@ -812,7 +914,7 @@ class Scheduler:
                 k_step = max(k_step, prof.n_draft)
                 e_step = max(e_step, prof.exit_layer)
         if k_step == 0:  # every speculative slot was preempted away
-            return self._step_decode()
+            return self._begin_decode()
         n_live = np.maximum(w - 1, 0)
         base = np.zeros((self.slots,), np.int32)
         for slot, st in self.active.items():
@@ -827,6 +929,15 @@ class Scheduler:
             self.model, self.params, cache, window, jnp.asarray(w), lengths,
         )
         self.pool.cache = cache
+        return ("spec", logits, window, w)
+
+    @hot_path
+    def _finish_speculative(self, logits, window, w) -> List[ServeRequest]:
+        """Commit phase: sample each verify lane under the key its token
+        index would use under plain decoding (the step's ONE device_get),
+        commit the accepted prefix plus the full model's correction token,
+        and roll back every rejected suffix host-side (``kv_cache.rewind``
+        + paged block-table truncation — no device gather or copy)."""
         samples, win = self._sample_window(logits, window)
         self._record_step_metrics()
         self.n_spec_steps += 1
@@ -920,24 +1031,65 @@ class Scheduler:
         pending chunk cursors the step is the mixed-step executable; with
         a speculative resident that still has >= 2 tokens of budget (and
         no resident groups) it is the draft+verify pair; otherwise (and
-        always when not chunked) the plain decode step."""
-        if self.chunked and len(self.chunk_mgr):
-            return self._step_mixed()
-        if self._spec_ready():
-            return self._step_speculative()
-        return self._step_decode()
+        always when not chunked) the plain decode step.
+
+        Split into ``step_begin`` (dispatch the device work, NO sync) and
+        ``step_finish`` (the one device_get + host commit) so the replica
+        router can dispatch EVERY replica's step before syncing any —
+        JAX's async dispatch then overlaps replica compute on multi-device
+        hosts. ``step()`` is the fused single-pool form."""
+        return self.step_finish(self.step_begin())
 
     @hot_path
-    def _step_decode(self) -> List[ServeRequest]:
+    def step_begin(self):
+        """Phase 1 of one pool-wide step: route to the step kind, dispatch
+        its device work asynchronously, and return an opaque pending
+        handle for ``step_finish`` (None = the step did all its work on
+        the host — e.g. everything was preempted back to the queue)."""
+        t = self.clock()
+        try:
+            if self.chunked and len(self.chunk_mgr):
+                return self._begin_mixed()
+            if self._spec_ready():
+                return self._begin_speculative()
+            return self._begin_decode()
+        finally:
+            self.busy_s += self.clock() - t
+
+    @hot_path
+    def step_finish(self, pending) -> List[ServeRequest]:
+        """Phase 2 of one pool-wide step: the step's ONE device_get plus
+        all host-side commit bookkeeping. Admissions must not run between
+        a replica's begin and finish — the commit walks the ``active``
+        set the dispatch captured."""
+        if pending is None:
+            return []
+        t = self.clock()
+        try:
+            kind = pending[0]
+            if kind == "mixed":
+                return self._finish_mixed(*pending[1:])
+            if kind == "spec":
+                return self._finish_speculative(*pending[1:])
+            return self._finish_decode(*pending[1:])
+        finally:
+            self.busy_s += self.clock() - t
+
+    @hot_path
+    def _begin_decode(self):
         if self.paged:
             self._ensure_blocks()
             if not self.active and not self.groups:
-                return []  # everything preempted back to the queue
+                return None  # everything preempted back to the queue
         self.pool.sync()
         logits, cache = engine.decode_step(
             self.model, self.params, self.pool.cache, jnp.asarray(self._token)
         )
         self.pool.cache = cache
+        return ("decode", logits)
+
+    @hot_path
+    def _finish_decode(self, logits) -> List[ServeRequest]:
         toks = self._sample(logits)
         self._record_step_metrics()
         now = self._now()
@@ -946,11 +1098,12 @@ class Scheduler:
         return done
 
     @hot_path
-    def _step_mixed(self) -> List[ServeRequest]:
-        """One token-budget mixed step: decode tokens for every live slot
-        PLUS up to ``prefill_budget`` prompt-chunk tokens (the plan from
-        core/prefill.py), dispatched as ONE compiled executable — admission
-        rides the pool-wide step instead of stalling it."""
+    def _begin_mixed(self):
+        """Dispatch phase of one token-budget mixed step: decode tokens
+        for every live slot PLUS up to ``prefill_budget`` prompt-chunk
+        tokens (the plan from core/prefill.py), dispatched as ONE compiled
+        executable — admission rides the pool-wide step instead of
+        stalling it."""
         self._ensure_blocks()  # decode growth first (victims incl. cursors)
         # pack, then back every chunk's span with blocks; a starved cursor
         # is excluded and the plan rebuilt so its budget share flows to
@@ -973,7 +1126,7 @@ class Scheduler:
                 # every pending chunk is block-starved: run the cheap
                 # 1-lane decode executable, not a C-lane mixed step that
                 # would carry zero prefill tokens
-                return self._step_decode()
+                return self._begin_decode()
             # nothing runnable: several cursors wedged on blocks — free the
             # youngest lowest-priority one and retry on the next loop turn
             if len(self.chunk_mgr) <= 1:
@@ -982,7 +1135,7 @@ class Scheduler:
                     "worst-case request"
                 )
             self._preempt(self._victim())
-            return []
+            return None
         # authoritative per-slot write positions from host state: plain
         # decode steps drift the device counters of free and mid-prefill
         # rows (every row increments), so the mixed step pins them — inside
@@ -1002,6 +1155,10 @@ class Scheduler:
             jnp.asarray(base),
         )
         self.pool.cache = cache
+        return ("mixed", logits, kept)
+
+    @hot_path
+    def _finish_mixed(self, logits, kept) -> List[ServeRequest]:
         toks = self._sample(logits)
         self._record_step_metrics()
         self.n_mixed_steps += 1

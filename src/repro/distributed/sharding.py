@@ -21,7 +21,7 @@ one (the layer axis is never sharded).
 from __future__ import annotations
 
 import re
-from typing import Any, Optional, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -251,3 +251,31 @@ def to_shardings(mesh: Mesh, spec_tree: Any) -> Any:
         spec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ---- data-parallel replica placement (core/router.py) ----------------------
+# Step 1 of the multi-host serve plan: each ReplicaRouter pool pins its
+# params + KV cache to its own device slice. Today a "slice" is one whole
+# device (round-robin over jax.devices()); when the tensor-parallel pool
+# (step 2) lands, replica_devices grows into mesh-slice carving and
+# place_replica into a NamedSharding placement over that slice — the
+# router only ever sees these two seams.
+
+def replica_devices(n: int, devices: Optional[Sequence[Any]] = None) -> list:
+    """Device pin per replica: round-robin over the host's devices (or an
+    explicit pool), wrapping when replicas outnumber devices — replicas
+    that share a device time-share it, which keeps the routing layer
+    testable on single-device CI hosts."""
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if not devs:
+        raise ValueError("no devices to place replicas on")
+    return [devs[i % len(devs)] for i in range(n)]
+
+
+def place_replica(tree: Any, device: Any) -> Any:
+    """Commit a pytree (params / cache) to one replica's device; ``None``
+    leaves placement to JAX's default (single-device hosts share the one
+    params object across replicas — no copy)."""
+    if device is None:
+        return tree
+    return jax.device_put(tree, device)

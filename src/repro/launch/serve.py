@@ -195,11 +195,40 @@ def apply_profile_mix(
     return requests
 
 
-def serve_metrics(done: List[ServeRequest], wall: float) -> Dict[str, float]:
+def request_class(r: ServeRequest) -> str:
+    """SLA class of one request for the per-class latency breakdown:
+    ``beam`` / ``contrastive`` (multi-stream slot groups), ``speculative``
+    (draft/verify windows), else ``greedy`` or ``sampling`` by
+    temperature. Classes, not rids, are what production SLOs quote."""
+    p = r.profile
+    if isinstance(p, profiles.SpeculativeProfile):
+        return "speculative"
+    if p is not None and profiles.n_streams_of(p) > 1:
+        return type(p).__name__.replace("Profile", "").lower()
+    return "greedy" if r.temperature <= 0.0 else "sampling"
+
+
+def serve_metrics(done: List[ServeRequest], wall: float) -> Dict[str, object]:
     total_tok = sum(len(r.tokens) for r in done)
     ttft = [r.ttft for r in done]
     tpot = [r.tpot for r in done if len(r.tokens) > 1]
     e2e = [r.e2e for r in done]
+    per_class: Dict[str, Dict[str, float]] = {}
+    for cls in sorted({request_class(r) for r in done}):
+        rs = [r for r in done if request_class(r) == cls]
+        c_ttft = [r.ttft for r in rs]
+        c_tpot = [r.tpot for r in rs if len(r.tokens) > 1]
+        per_class[cls] = {
+            "n_requests": len(rs),
+            "ttft_p50_ms": float(np.percentile(c_ttft, 50)) * 1e3,
+            "ttft_p99_ms": float(np.percentile(c_ttft, 99)) * 1e3,
+            "tpot_p50_ms": (
+                float(np.percentile(c_tpot, 50)) * 1e3 if c_tpot else 0.0
+            ),
+            "tpot_p99_ms": (
+                float(np.percentile(c_tpot, 99)) * 1e3 if c_tpot else 0.0
+            ),
+        }
     return {
         "n_requests": len(done),
         "total_tokens": total_tok,
@@ -209,6 +238,7 @@ def serve_metrics(done: List[ServeRequest], wall: float) -> Dict[str, float]:
         "tpot_p50_ms": (float(np.percentile(tpot, 50)) * 1e3) if tpot else 0.0,
         "e2e_p50_s": float(np.percentile(e2e, 50)),
         "e2e_p99_s": float(np.percentile(e2e, 99)),
+        "per_class": per_class,
     }
 
 
@@ -219,12 +249,28 @@ def run_scheduler(
     paged: bool = False, block_size: int = 16,
     num_blocks: Optional[int] = None, chunked: bool = False,
     prefill_budget: Optional[int] = None, seed: int = 0,
+    replicas: Optional[int] = None, devices="auto",
     return_requests: bool = False,
 ):
     """Serve one trace; returns metrics (plus the scheduler's counters).
     Paged mode reports the block-level memory picture: bytes the pool
     keeps RESERVED vs the bytes its peak block working set actually USED
-    (the reserved-but-unused gap is what paging reclaims, Fig 1)."""
+    (the reserved-but-unused gap is what paging reclaims, Fig 1).
+    ``replicas=N`` routes the trace through a ReplicaRouter — N
+    data-parallel pools of THIS geometry behind one shared queue — and
+    merges in the fleet metrics (spills, requeues, per-replica report,
+    and the busy-time aggregate service rate). ``replicas=1`` is a
+    one-replica router (the symmetric-accounting baseline the scaling
+    bench compares against); ``None`` (default) is the plain scheduler."""
+    if replicas is not None:
+        return _run_router(
+            model, params, requests, replicas=replicas, devices=devices,
+            slots=slots, pad_to=pad_to, max_new_cap=max_new_cap,
+            eos_id=eos_id, policy=policy, paged=paged, block_size=block_size,
+            num_blocks=num_blocks, chunked=chunked,
+            prefill_budget=prefill_budget, seed=seed,
+            return_requests=return_requests,
+        )
     sched = Scheduler(
         model, params, slots=slots, pad_to=pad_to, max_new_cap=max_new_cap,
         eos_id=eos_id, policy=policy, paged=paged, block_size=block_size,
@@ -298,6 +344,87 @@ def run_scheduler(
             # must stay 0 under chunking, except slot-group admissions
             # (multi-stream profiles take the dense prefill path)
             full_prefills=sched.n_prefills,
+        )
+    if return_requests:
+        return m, done
+    return m
+
+
+def _run_router(
+    model, params, requests: List[ServeRequest], *,
+    replicas: int, devices, slots: int, pad_to: int, max_new_cap: int,
+    eos_id: Optional[int], policy: str, paged: bool, block_size: int,
+    num_blocks: Optional[int], chunked: bool,
+    prefill_budget: Optional[int], seed: int, return_requests: bool,
+):
+    """Replica-routed arm of ``run_scheduler``: one shared queue over N
+    data-parallel pools (core/router.py). ``tokens_per_s`` stays the real
+    wall-clock rate (replicas time-share a single-device host);
+    ``aggregate_tokens_per_s`` is the fleet service rate — total tokens
+    over the SLOWEST replica's device-busy seconds, i.e. the wall a real
+    one-device-per-replica deployment would take — which is what the
+    near-linear-scaling bench gate measures."""
+    from repro.core.router import ReplicaRouter
+
+    if policy != "continuous":
+        raise ValueError("replica routing requires policy='continuous'")
+    router = ReplicaRouter(
+        model, params, replicas=replicas, devices=devices, slots=slots,
+        pad_to=pad_to, max_new_cap=max_new_cap, eos_id=eos_id, paged=paged,
+        block_size=block_size, num_blocks=num_blocks, chunked=chunked,
+        prefill_budget=prefill_budget, base_key=jax.random.PRNGKey(seed),
+    )
+    t0 = time.perf_counter()
+    done = router.run(requests)
+    wall = time.perf_counter() - t0
+    m = serve_metrics(done, wall)
+    stalls = np.asarray(router.admission_stalls, np.float64)
+    m.update(
+        wall_s=wall,
+        replicas=replicas,
+        decode_steps=router.n_decode_steps,
+        steps_max=router.steps_max,
+        prefills=router.n_prefills,
+        mean_slot_occupancy=router.mean_occupancy,
+        kv_reserved_bytes=router.reserved_bytes,
+        n_admission_stalls=len(stalls),
+        admission_stall_p50_ms=(
+            float(np.percentile(stalls, 50)) * 1e3 if len(stalls) else 0.0
+        ),
+        admission_stall_max_ms=(
+            float(stalls.max()) * 1e3 if len(stalls) else 0.0
+        ),
+        spills=router.n_spills,
+        requeues=router.n_requeues,
+        busy_max_s=router.busy_max_s,
+        aggregate_tokens_per_s=(
+            m["total_tokens"] / max(router.busy_max_s, 1e-9)
+        ),
+        per_replica=router.replica_report(done),
+    )
+    if paged:
+        bo = [s.mean_block_occupancy for s in router.replicas
+              if s.block_occupancy_trace]
+        pool0 = router.replicas[0].pool
+        token_bytes = pool0.reserved_bytes / max(
+            pool0.num_blocks * pool0.block_size, 1
+        )
+        m.update(
+            n_preemptions=router.n_preemptions,
+            mean_block_occupancy=float(sum(bo) / len(bo)) if bo else 0.0,
+            kv_used_peak_bytes=int(sum(
+                s.peak_used_blocks * s.pool.block_size * token_bytes
+                for s in router.replicas
+            )),
+        )
+    if chunked:
+        m.update(
+            mixed_steps=router.n_mixed_steps,
+            prefill_chunks=sum(s.n_chunks for s in router.replicas),
+            prefill_chunk_tokens=sum(
+                s.n_chunk_tokens for s in router.replicas
+            ),
+            full_prefills=router.n_prefills,
         )
     if return_requests:
         return m, done
@@ -386,6 +513,12 @@ def main(argv=None):
                     help="early-exit draft depth for speculative requests")
     ap.add_argument("--n-draft", type=int, default=4,
                     help="draft tokens per speculative window")
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="data-parallel replica pools behind one shared "
+                         "queue (core/router.py); each replica gets its "
+                         "own --batch-slots-sized pool + KV cache, pinned "
+                         "to its own device when the host has several "
+                         "(default: plain single scheduler, no router)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrivals per second; 0 = all at t=0")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -437,10 +570,12 @@ def main(argv=None):
         paged=args.paged, block_size=args.block_size,
         num_blocks=args.num_blocks, chunked=args.chunked,
         prefill_budget=args.prefill_budget, seed=args.seed,
+        replicas=args.replicas,
     )
     mode = args.policy + ("/paged" if args.paged else "") + (
         "/chunked" if args.chunked else "") + (
-        "/mix" if args.profile_mix else "")
+        "/mix" if args.profile_mix else "") + (
+        f"/x{args.replicas}" if args.replicas is not None else "")
     print(f"[serve/{mode}] {m['n_requests']} requests in "
           f"{m['wall_s']:.2f}s | {m['tokens_per_s']:.1f} tok/s | "
           f"occupancy={m['mean_slot_occupancy']:.2f} | "
@@ -471,6 +606,19 @@ def main(argv=None):
               f"acceptance={m['spec_acceptance']:.2f} | "
               f"tokens/step={m['spec_tokens_per_step']:.2f} | "
               f"commit hist={m['spec_commit_hist']}")
+    if args.replicas is not None:
+        print(f"[serve/{mode}] spills={m['spills']} | "
+              f"requeues={m['requeues']} | "
+              f"aggregate={m['aggregate_tokens_per_s']:.1f} tok/s over "
+              f"busy max={m['busy_max_s']:.2f}s (fleet service rate; "
+              f"wall tok/s above is the single-host time-share)")
+        for e in m["per_replica"]:
+            print(f"[serve/{mode}]   replica {e['replica']}: "
+                  f"{e['n_requests']} reqs | steps={e['decode_steps']} | "
+                  f"preempt={e['preemptions']} | busy={e['busy_s']:.2f}s | "
+                  f"occ={e['mean_slot_occupancy']:.2f} | "
+                  f"ttft p50={e['ttft_p50_ms']:.0f}ms | "
+                  f"tpot p50={e['tpot_p50_ms']:.1f}ms")
     return m
 
 
