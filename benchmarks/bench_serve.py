@@ -32,6 +32,19 @@ allocation differ:
               (one retry — wall clock), and zero new KV device buffers
               (drafts write the static pool; rollback is a host-side
               lengths rewind + block-table truncation)
+  prefix-cache a shared-system-prompt trace (2 prefixes reused Zipf-style
+              under bursty arrivals) served cold vs with the
+              cross-request radix prefix cache (core/prefix_cache.py)
+              through the paged+chunked scheduler. Gates: per-request
+              token identity warm vs cold at temperature 0 AND 0.8
+              (hits adopt bit-identical blocks, so caching can never
+              show in tokens), >= 50% of all prompt tokens served out
+              of cached blocks instead of prefill, strictly lower
+              median TTFT than the cold arm (the latency the skipped
+              prefill buys; the one wall-clock sub-gate, retried once),
+              zero reserved-byte delta (the trie is host state — reuse,
+              not growth), and zero recompiles (adoption reuses the
+              already-compiled block-table/length executables)
   replicas    the SAME trace served by one paged pool vs a 2-replica
               ReplicaRouter (core/router.py): data-parallel pools behind
               one shared queue with load-aware placement. Gates: tokens
@@ -65,6 +78,7 @@ tax and paged reservations actually go unused under contiguous slots.
   PYTHONPATH=src python benchmarks/bench_serve.py --smoke --paged --chunked
   PYTHONPATH=src python benchmarks/bench_serve.py --smoke --paged --chunked \
       --speculative
+  PYTHONPATH=src python benchmarks/bench_serve.py --smoke --prefix-cache
   PYTHONPATH=src python benchmarks/bench_serve.py --smoke --replicas
 """
 from __future__ import annotations
@@ -540,6 +554,127 @@ def _replica_gate(n_requests: int = 12, arrival_rate: float = 200.0,
     return ok, stats
 
 
+def _prefix_cache_gate(n_requests: int = 20, seed: int = 0,
+                       verbose: bool = True, attempts: int = 1):
+    """The prefix-cache leg: a shared-system-prompt trace (2 system
+    prompts of 4 full blocks each, reused Zipf-style under bursty
+    Poisson arrivals) served through the paged+chunked scheduler cold
+    and warm (--prefix-cache), at temperature 0 and 0.8. Deterministic
+    sub-gates (never retried): (1) warm tokens bit-identical to cold at
+    BOTH temperatures — adopted blocks hold exactly the K/V cold prefill
+    would recompute, and sampling keys are per-(rid, stream,
+    token-index); (2) >= 50% of all prompt tokens served out of cached
+    blocks (prefill-tokens-skipped / total prompt tokens); (3) zero
+    reserved-byte delta between the arms — the trie is pure host state;
+    (4) zero recompiles once the cold arms have run — adoption reuses
+    the already-compiled executables. The one wall-clock sub-gate,
+    retried once: strictly lower median TTFT warm than cold at
+    temperature 0 (what the skipped prefill work buys under queueing).
+    Returns (ok, stats)."""
+    from repro.analysis import trace_audit
+
+    model, params = _smoke_model()
+    cfg = model.config
+    # dedicated geometry: small blocks so a 16-token system prompt spans
+    # 4 FULL blocks (matches stop at full-block granularity), prompts of
+    # prefix + 1..8 suffix tokens, enough blocks that the TTFT compare
+    # isn't preemption-noise (reclaim/preemption paths are locked down by
+    # tests/test_prefix_cache.py instead)
+    block_size, pad_to, prefix_len = 4, 24, 16
+    max_new_cap, budget, num_blocks, n_prefixes = 8, 8, 48, 2
+    arrival = 300.0
+
+    def trace(temperature: float):
+        return serve.shared_prefix_trace(
+            n_requests, n_prefixes=n_prefixes, prefix_len=prefix_len,
+            pad_to=pad_to, max_new_cap=max_new_cap,
+            vocab_size=cfg.vocab_size, arrival_rate=arrival,
+            zipf_a=1.1, burst_size=4, seed=seed, temperature=temperature,
+            top_p=0.9 if temperature > 0 else 1.0,
+        )
+
+    def arm(prefix_cache: bool, temperature: float):
+        m, done = serve.run_scheduler(
+            model, params, trace(temperature), slots=SLOTS, pad_to=pad_to,
+            max_new_cap=max_new_cap, policy="continuous", seed=seed,
+            paged=True, block_size=block_size, num_blocks=num_blocks,
+            chunked=True, prefill_budget=budget, prefix_cache=prefix_cache,
+            return_requests=True,
+        )
+        return m, {r.rid: list(r.tokens) for r in done}
+
+    serve.warmup(model, params, slots=SLOTS, pad_to=pad_to,
+                 max_new_cap=max_new_cap, paged=True, block_size=block_size,
+                 num_blocks=num_blocks, chunked=True, prefill_budget=budget,
+                 prefix_cache=True)
+    total_prompt_tokens = sum(len(r.prompt) for r in trace(0.0))
+
+    for attempt in range(attempts):
+        cold = {t: arm(False, t) for t in (0.0, 0.8)}
+        # the cold arms compiled everything this geometry needs; the warm
+        # arms below must add NOTHING to any serving jit cache
+        jits = trace_audit.serving_jits()
+        sizes_before = trace_audit._cache_sizes(jits)
+        warm = {t: arm(True, t) for t in (0.0, 0.8)}
+        recompiles = [
+            f"{name}: {sizes_before[name]} -> {n}"
+            for name, n in trace_audit._cache_sizes(jits).items()
+            if n != sizes_before[name]
+        ]
+        identical = {
+            f"t{t}": warm[t][1] == cold[t][1] and len(cold[t][1]) == n_requests
+            for t in (0.0, 0.8)
+        }
+        mw, mc = warm[0.0][0], cold[0.0][0]
+        skip_frac = mw["prefill_tokens_skipped"] / max(total_prompt_tokens, 1)
+        reserved_delta = mw["kv_reserved_bytes"] - mc["kv_reserved_bytes"]
+        stats = dict(
+            n_done=mw["n_requests"],
+            wall_s=mw["wall_s"],
+            prefix_hits=mw["prefix_hits"],
+            prefix_lookups=mw["prefix_lookups"],
+            prefix_hit_rate=mw["prefix_hit_rate"],
+            prefill_tokens_skipped=mw["prefill_tokens_skipped"],
+            total_prompt_tokens=total_prompt_tokens,
+            skip_frac=skip_frac,
+            mean_cached_blocks=mw["mean_cached_blocks"],
+            prefix_blocks_reclaimed=mw["prefix_blocks_reclaimed"],
+            ttft_p50_warm_ms=mw["ttft_p50_ms"],
+            ttft_p50_cold_ms=mc["ttft_p50_ms"],
+            preemptions_warm=mw["n_preemptions"],
+            reserved_delta=reserved_delta,
+            recompiles=recompiles,
+            token_identical=identical,
+        )
+        det_ok = (
+            all(identical.values())
+            and mw["n_requests"] == n_requests
+            and skip_frac >= 0.5
+            and reserved_delta == 0
+            and not recompiles
+        )
+        ttft_ok = mw["ttft_p50_ms"] < mc["ttft_p50_ms"]
+        ok = det_ok and ttft_ok
+        if verbose:
+            print(f"cold: ttft p50={mc['ttft_p50_ms']:6.1f}ms  "
+                  f"steps={mc['decode_steps']}  wall={mc['wall_s']:.2f}s")
+            print(f"warm: ttft p50={mw['ttft_p50_ms']:6.1f}ms  "
+                  f"steps={mw['decode_steps']}  wall={mw['wall_s']:.2f}s  "
+                  f"hits={stats['prefix_hits']}/{stats['prefix_lookups']}  "
+                  f"skipped={stats['prefill_tokens_skipped']}"
+                  f"/{total_prompt_tokens} ({skip_frac:.0%})  "
+                  f"cached-blocks mean={stats['mean_cached_blocks']:.1f}  "
+                  f"reclaimed={stats['prefix_blocks_reclaimed']}  "
+                  f"preemptions={stats['preemptions_warm']}  "
+                  f"reserved_delta={reserved_delta}B  "
+                  f"recompiles={len(recompiles)}  "
+                  f"token-identical={identical}")
+        if ok or not det_ok or attempt == attempts - 1:
+            return ok, stats
+        print("TTFT gate missed; retrying once (wall-clock noise)")
+    return ok, stats
+
+
 def _paged_decode_no_growth():
     """Satellite gate, delegated to repro.analysis.trace_audit (the
     generalization of the hand-rolled HLO scan this bench used to carry):
@@ -594,6 +729,7 @@ def _snapshot(n_requests: int = N_REQUESTS, arrival_rate: float = 200.0,
                                       verbose=False)
     _, replica_stats = _replica_gate(arrival_rate=arrival_rate, seed=seed,
                                      verbose=False)
+    _, prefix_stats = _prefix_cache_gate(seed=seed, verbose=False)
 
     def clean(v):
         if isinstance(v, dict):
@@ -626,6 +762,11 @@ def _snapshot(n_requests: int = N_REQUESTS, arrival_rate: float = 200.0,
                 "n_replicas": REPLICAS,
                 "recompiles": len(replica_stats["recompiles"]),
             }),
+            "prefix_cache": clean({
+                **{k: v for k, v in prefix_stats.items()
+                   if k != "recompiles"},
+                "recompiles": len(prefix_stats["recompiles"]),
+            }),
         },
         "derived": clean({
             "continuous_speedup":
@@ -638,6 +779,8 @@ def _snapshot(n_requests: int = N_REQUESTS, arrival_rate: float = 200.0,
                 "speculative_vs_engine": spec_stats["token_identical"],
                 "replicas_vs_single":
                     all(replica_stats["token_identical"].values()),
+                "prefix_cache_vs_cold":
+                    all(prefix_stats["token_identical"].values()),
             },
         }),
         "analysis": {
@@ -681,7 +824,7 @@ def bench() -> list[Row]:
          f"p50 {ck['admission_stall_p50_ms']:.1f}ms vs paged "
          f"{pg['admission_stall_p50_ms']:.1f}ms, "
          f"token-identical={chunk_equiv}"),
-    ]) + _speculative_rows() + _replica_rows()
+    ]) + _speculative_rows() + _replica_rows() + _prefix_rows()
 
 
 def _speculative_rows() -> list[Row]:
@@ -717,6 +860,24 @@ def _replica_rows() -> list[Row]:
     ])
 
 
+def _prefix_rows() -> list[Row]:
+    """The cross-request-reuse trajectory row: shared-system-prompt
+    traffic served warm vs cold through the radix prefix cache
+    (core/prefix_cache.py) — the fraction of prompt tokens that never
+    ran prefill is the structural trajectory number; TTFT is the
+    latency it buys."""
+    _, pf = _prefix_cache_gate(verbose=False)
+    return emit([
+        ("serve/prefix_cache", pf["wall_s"] * 1e6,
+         f"{pf['skip_frac']:.0%} prompt tokens served from cache "
+         f"({pf['prefill_tokens_skipped']}/{pf['total_prompt_tokens']})  "
+         f"hit-rate={pf['prefix_hit_rate']:.2f}  "
+         f"ttft p50 {pf['ttft_p50_cold_ms']:.0f} -> "
+         f"{pf['ttft_p50_warm_ms']:.0f}ms  "
+         f"token-identical={pf['token_identical']}"),
+    ])
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -740,6 +901,13 @@ def main(argv=None) -> int:
                          "engine, >1.5 accepted tokens per speculative "
                          "slot-step, fewer pool steps, zero new KV device "
                          "buffers, and >=1.2x tok/s")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="run ONLY the cross-request prefix-cache leg: a "
+                         "shared-system-prompt trace served cold vs warm "
+                         "through the radix trie, gated on token identity "
+                         "at temperature 0 and 0.8, >=50% prompt tokens "
+                         "served from cache, strictly lower median TTFT, "
+                         "zero reserved-byte delta, and zero recompiles")
     ap.add_argument("--replicas", action="store_true",
                     help="run ONLY the replica-router leg: the same trace "
                          "served by one paged pool vs a 2-replica "
@@ -803,6 +971,22 @@ def main(argv=None) -> int:
                           "non-speculative engine at >1.5 accepted tokens "
                           "per slot-step, fewer pool steps, zero new KV "
                           "device buffers, and >=1.2x tok/s"))
+        return 0 if ok else 1
+
+    if args.prefix_cache:
+        # identity, skip fraction, reserved bytes and the recompile count
+        # are deterministic; only the TTFT comparison reads the clock,
+        # and _prefix_cache_gate retries only that part
+        ok, _ = _prefix_cache_gate(seed=args.seed,
+                                   attempts=2 if args.smoke else 1)
+        if not args.smoke:
+            return 0
+        print("SMOKE " + ("PASS" if ok else
+                          "FAIL: need warm tokens identical to cold at "
+                          "temperature 0 and 0.8, >=50% prompt tokens "
+                          "served from cached blocks, strictly lower "
+                          "median TTFT, zero reserved-byte delta, and "
+                          "zero recompiles"))
         return 0 if ok else 1
 
     if args.replicas:

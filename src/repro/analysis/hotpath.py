@@ -39,6 +39,15 @@ HOT_PATHS = frozenset({
     # once per pool step while a SpeculativeProfile request is resident
     "repro.core.engine.verify_step",
     "repro.core.layerskip.draft_window",
+    # the cross-request prefix cache's trie walks run once per admission
+    # (match/insert) and inside the out-of-blocks back-pressure path
+    # (reclaim) — pure host code, but on the admission hot path, so HS001
+    # guards them against per-token host syncs/casts (the trie keys are
+    # raw span BYTES for exactly this reason). The scheduler-side hooks
+    # (_prefix_admit, _ensure_or_reclaim) carry @hot_path directly.
+    "repro.core.prefix_cache.PrefixCache.match",
+    "repro.core.prefix_cache.PrefixCache.insert",
+    "repro.core.prefix_cache.PrefixCache.reclaim",
     # replica routing (core/router.py) adds NO new device programs: every
     # replica replays the executables above (one shared jit cache keyed by
     # pool geometry). Its per-round host code IS hot, and is decorated

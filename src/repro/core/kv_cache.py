@@ -134,6 +134,29 @@ and re-decodes under the same per-(request, stream, token-index) keys,
 and since every committed token was sampled from full-model logits, the
 replayed stream is bit-identical whether or not (and where in a window)
 the preemption hit.
+
+Cross-request prefix sharing
+----------------------------
+The same §4.1.2 indirection that lets one GROUP's streams share prefix
+blocks (above) lets DIFFERENT requests share them: a block-table row is
+just a map from logical block index to physical block, so any row may
+point at any block, including one another request's prompt produced.
+core/prefix_cache.py keys a radix trie by full-block spans of prompt
+TOKEN ids — under deterministic prefill, identical token spans under
+identical ancestors imply bit-identical block contents, so the span hash
+IS a content address for the K/V block. On admission the scheduler
+copies the matched chain's physical ids into the new row's leading
+entries (``BlockPool.adopt``: plus one pool refcount per block, and the
+device ``lengths`` entry is pinned to the matched token count so no
+write can land below it) and prefill starts at the first uncached token.
+Finished prompts hand their full blocks to the trie by refcount handoff
+(``cache_ref`` before the eviction decref — the block never visits the
+free-list), giving the pool a third block state: free / owned / cached.
+Cached blocks with no slot reference are reclaimed LRU-leaf-first under
+out-of-blocks pressure, BEFORE preemption. None of this adds a device
+program: adoption is a table edit + one ``set_slot_length``, insertion
+and reclaim are pure host bookkeeping, and reserved KV bytes do not
+change — reuse, not growth.
 """
 from __future__ import annotations
 

@@ -24,9 +24,17 @@ packer's invariants are property-testable without a model:
   token is ever written twice, and a final partial chunk is *padded* to
   the lane width (``t_new`` records the true length), never dropped;
 - preemption of a half-prefilled request simply removes its cursor
-  (:meth:`ChunkedPrefill.remove`); re-admission starts a fresh cursor at
-  ``pos = 0`` and the per-(rid, step) sampling keys replay the identical
-  token stream.
+  (:meth:`ChunkedPrefill.remove`); re-admission starts a fresh cursor and
+  the per-(rid, step) sampling keys replay the identical token stream.
+
+A cursor need not start at ``pos = 0``: with the cross-request prefix
+cache (core/prefix_cache.py) the scheduler adopts every cached full block
+of the prompt at admission and starts the cursor at the first UNCACHED
+token — the packer only ever sees (and budgets) the uncached suffix. The
+match is capped so at least one suffix token always remains, and a
+preempted request's replay re-matches the trie from scratch (it may hit
+the very blocks it inserted on preemption), so nonzero starts compose
+with every invariant above unchanged.
 
 The scheduler (core/scheduler.py, ``chunked=True``) owns block allocation:
 before dispatching a plan it ensures each scheduled chunk's span of KV
@@ -115,7 +123,9 @@ class ChunkedPrefill:
 
     def remove(self, slot: int) -> ChunkCursor:
         """Drop a cursor (prefill finished, or the request was preempted —
-        re-admission restarts from ``pos = 0`` with a fresh cursor)."""
+        re-admission builds a fresh cursor, restarting at ``pos = 0`` or,
+        with the prefix cache, at the first token its trie re-match does
+        not cover)."""
         return self.cursors.pop(slot)
 
     def plan(self, decode_tokens: np.ndarray, decode_slots: Iterable[int],

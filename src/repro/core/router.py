@@ -57,7 +57,7 @@ from typing import Any, Deque, Dict, List, Optional, Sequence
 import jax
 
 from repro.analysis.hotpath import hot_path
-from repro.core.scheduler import Scheduler, ServeRequest
+from repro.core.scheduler import Scheduler, ServeRequest, age_waiting
 from repro.distributed import sharding
 
 
@@ -86,6 +86,8 @@ class ReplicaRouter:
         num_blocks: Optional[int] = None,
         chunked: bool = False,
         prefill_budget: Optional[int] = None,
+        prefix_cache: bool = False,
+        priority_boost_after: Optional[float] = None,
         base_key: Optional[jax.Array] = None,
         clock=time.perf_counter,
         devices: Any = "auto",
@@ -105,6 +107,10 @@ class ReplicaRouter:
                 f"got {len(devices)}"
             )
         self.clock = clock
+        # SLA aging happens at the SHARED queue (the replicas' own queues
+        # only ever hold preemption replays), so the router owns the knob
+        self.priority_boost_after = priority_boost_after
+        self.n_priority_boosts = 0
         self.replicas: List[Scheduler] = [
             Scheduler(
                 model, sharding.place_replica(params, dev),
@@ -112,6 +118,11 @@ class ReplicaRouter:
                 eos_id=eos_id, paged=paged, block_size=block_size,
                 num_blocks=num_blocks, chunked=chunked,
                 prefill_budget=prefill_budget,
+                # each replica keeps its own INDEPENDENT trie: cached
+                # blocks live in that replica's device pool, and hits are
+                # bit-identical to cold prefill, so per-replica hit-rate
+                # variance never leaks into tokens
+                prefix_cache=prefix_cache,
                 base_key=base_key,  # SHARED: tokens must not depend on placement
                 clock=clock, replica_id=i, device=dev,
             )
@@ -167,6 +178,9 @@ class ReplicaRouter:
         admission stall while any replica can admit the candidate). Must
         not run between a round's ``step_begin`` and ``step_finish``: the
         commit walks the active set the dispatch captured."""
+        self.n_priority_boosts += age_waiting(
+            self.waiting, now, self.priority_boost_after
+        )
         while True:
             i, cand = self._next_candidate(now)
             if cand is None:
@@ -253,6 +267,31 @@ class ReplicaRouter:
     @property
     def reserved_bytes(self) -> int:
         return sum(s.pool.reserved_bytes for s in self.replicas)
+
+    @property
+    def n_prefix_lookups(self) -> int:
+        return sum(s.n_prefix_lookups for s in self.replicas)
+
+    @property
+    def n_prefix_hits(self) -> int:
+        return sum(s.n_prefix_hits for s in self.replicas)
+
+    @property
+    def n_prefix_tokens_skipped(self) -> int:
+        return sum(s.n_prefix_tokens_skipped for s in self.replicas)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.n_prefix_hits / max(self.n_prefix_lookups, 1)
+
+    @property
+    def n_prefix_reclaimed(self) -> int:
+        return sum(s.n_prefix_reclaimed for s in self.replicas)
+
+    @property
+    def mean_cached_blocks(self) -> float:
+        per = [s.mean_cached_blocks for s in self.replicas]
+        return float(sum(per) / len(per)) if per else 0.0
 
     @property
     def mean_occupancy(self) -> float:

@@ -50,6 +50,27 @@ Admission and preemption honor ``ServeRequest.priority`` (default 0,
 higher = more urgent): the admission loop picks the highest-priority
 arrived request (stable FIFO within a class), and the preemption victim
 is always the youngest request of the LOWEST resident priority.
+``priority_boost_after=T`` adds the SLA aging seam: every waiting
+request's priority is bumped by one per full T seconds waited
+(``age_waiting``), so low-priority traffic cannot starve behind a
+steady high-priority stream — the boost is remembered on the request
+(``n_boosts``) and survives preemption replay and router requeues.
+
+``prefix_cache=True`` (requires ``chunked=True``) turns the pool's
+refcounted block sharing into a cross-request radix prefix cache
+(core/prefix_cache.py): chunked admission first walks the trie over the
+prompt's full-block spans, adopts every matched block into the slot's
+table (refcounted, zero device work), and starts the chunk cursor at
+the first uncached token — shared-prompt traffic skips most of its
+prefill compute. A finishing (or preempted / evicted) request's full
+prompt blocks are handed over to the trie instead of freed; cached
+blocks nobody references are reclaimed LRU-first by the out-of-blocks
+back-pressure path BEFORE preemption. Hits are bit-identical to cold
+prefill at any temperature: matched K/V was produced by the same
+compiled executables over the same token prefix, at least one suffix
+token is always re-computed (so the first sampled token's logits come
+off the same mixed-step executable), and sampling keys are pure
+per-(rid, stream, token-index).
 
 ``ServeRequest.profile`` (core/profiles.py) generalizes WHAT a request
 decodes: a multi-stream ``DecodingProfile`` (beam, contrastive) is
@@ -119,6 +140,7 @@ import numpy as np
 from repro.analysis.hotpath import hot_path
 from repro.core import engine, kv_cache, layerskip, profiles, sampling
 from repro.core.prefill import ChunkCursor, ChunkedPrefill
+from repro.core.prefix_cache import PrefixCache
 from repro.core.slot_pool import BlockPool, SlotPool
 from repro.models.registry import Model
 
@@ -139,6 +161,9 @@ class ServeRequest:
     # automatically from a single-stream SamplingProfile's eos_id)
     eos_id: Optional[int] = None
     priority: int = 0  # higher = more urgent (admission + preemption)
+    # SLA aging bookkeeping (``age_waiting``): boosts already folded into
+    # ``priority``, so requeues/replays never re-grant a boost
+    n_boosts: int = 0
     # HOW to decode: None = plain per-slot sampling (temperature/top_p
     # above); a multi-stream DecodingProfile (beam/contrastive) makes this
     # request a slot GROUP of profile.n_streams slots
@@ -177,6 +202,28 @@ class ServeRequest:
         out = np.full((self.max_new,), pad, np.int32)
         out[: len(self.tokens)] = self.tokens
         return out
+
+
+def age_waiting(waiting, now: float, boost_after: Optional[float]) -> int:
+    """Max-waiting-time SLA boost, shared by ``Scheduler._admit`` and the
+    router's placement loop: bump an ARRIVED request's priority by one for
+    every full ``boost_after`` seconds it has waited, so low-priority
+    traffic ages its way past a steady high-priority stream instead of
+    starving. Monotonic and replay-safe: boosts already granted are
+    remembered on the request (``n_boosts``) and never re-granted after a
+    preemption requeue or router spill. Returns boosts granted."""
+    if boost_after is None or boost_after <= 0:
+        return 0
+    granted = 0
+    for r in waiting:
+        if r.t_arrival > now:
+            break  # arrivals are a sorted queue prefix (see _next_candidate)
+        due = int((now - r.t_arrival) // boost_after)
+        if due > r.n_boosts:
+            r.priority += due - r.n_boosts
+            granted += due - r.n_boosts
+            r.n_boosts = due
+    return granted
 
 
 @dataclass
@@ -247,6 +294,8 @@ class Scheduler:
         num_blocks: Optional[int] = None,
         chunked: bool = False,
         prefill_budget: Optional[int] = None,
+        prefix_cache: bool = False,
+        priority_boost_after: Optional[float] = None,
         base_key: Optional[jax.Array] = None,
         clock=time.perf_counter,
         replica_id: int = 0,
@@ -258,6 +307,11 @@ class Scheduler:
             raise ValueError("chunked prefill requires the paged block-pool")
         if chunked and policy != "continuous":
             raise ValueError("chunked prefill requires policy='continuous'")
+        if prefix_cache and not chunked:
+            # the chunk path is the only position-correct vehicle for a
+            # partial prompt: dense ``engine.prefill`` always computes
+            # from position 0, while a ChunkCursor starts anywhere
+            raise ValueError("prefix_cache requires chunked prefill")
         self.model = model
         self.params = params
         self.slots = slots
@@ -294,6 +348,12 @@ class Scheduler:
         if chunked:
             budget = prefill_budget if prefill_budget is not None else block_size
             self.chunk_mgr = ChunkedPrefill(slots, budget)
+        # cross-request prefix cache (host-only trie over the pool's
+        # blocks; allocates ZERO device memory — reuse, not growth)
+        self._pcache: Optional[PrefixCache] = (
+            PrefixCache(self.pool.block_size) if prefix_cache else None
+        )
+        self.priority_boost_after = priority_boost_after
         self.active: Dict[int, SlotState] = {}
         # slot groups (multi-stream profiles), keyed by their first slot
         self.groups: Dict[int, GroupState] = {}
@@ -330,6 +390,14 @@ class Scheduler:
         # fallback) vs pure host-side block-table permutations (paged beam)
         self.n_cache_reorders = 0
         self.n_block_permutes = 0
+        # cross-request prefix cache accounting: a "lookup" is one
+        # eligible chunked admission's trie walk; skipped tokens are
+        # prompt positions admission adopted instead of prefilling
+        self.n_prefix_lookups = 0
+        self.n_prefix_hits = 0
+        self.n_prefix_tokens_skipped = 0
+        self.cached_block_trace: List[int] = []  # per step, like occupancy
+        self.n_priority_boosts = 0  # SLA aging grants (age_waiting)
         # decode-stall-per-admission, measured DIRECTLY: when a request is
         # admitted while residents are decoding, the stall is the interval
         # from the previous step's commit to the next step's commit — the
@@ -472,6 +540,11 @@ class Scheduler:
             self.model, self.params, tokens, length, self.max_len,
             self._request_extra(req),
         )
+        if self.paged:
+            # dense assign pops the free-list directly: reclaim any
+            # shortfall from the prefix cache's LRU list first (the
+            # admission gate counted those blocks as effectively free)
+            self._reclaim_for(self.pool.blocks_for(n_prompt))
         self.pool.assign(slot, row, n_prompt)
         if self.paged:
             # claim the first decode step's block NOW (the admission gate
@@ -518,13 +591,18 @@ class Scheduler:
     def _admit_one_chunked(self, req: ServeRequest, now: float) -> None:
         """Chunked admission: no prefill program, no dense row — acquire a
         slot, enqueue a chunk cursor, and let the mixed steps stream the
-        prompt into the slot's blocks ``prefill_budget`` tokens at a time."""
+        prompt into the slot's blocks ``prefill_budget`` tokens at a time.
+        With the prefix cache on, the cursor starts at the first UNCACHED
+        token: every leading full block found in the trie is adopted into
+        the slot's table (refcounted sharing, zero device KV work) and its
+        tokens never enter a prefill chunk at all."""
         self._mark_admission_stall()
         slot = self.pool.acquire()
         assert slot is not None
-        cursor = ChunkCursor(req=req, slot=slot,
-                             prompt=self._trim_prompt(req.prompt),
-                             admit_seq=self._seq)
+        prompt = self._trim_prompt(req.prompt)
+        pos = self._prefix_admit(slot, prompt) if self._pcache is not None else 0
+        cursor = ChunkCursor(req=req, slot=slot, prompt=prompt,
+                             admit_seq=self._seq, pos=pos)
         self._seq += 1
         self.chunk_mgr.add(cursor)
         req.t_admit = now
@@ -554,6 +632,13 @@ class Scheduler:
         n_lens = {len(p) for p in prompts}
         assert len(n_lens) == 1, "group streams must share one prompt length"
         n_prompt = n_lens.pop()
+        if self.paged:
+            # group assigns pop the free-list directly (no adopt path for
+            # groups): reclaim any prefix-cache shortfall up front
+            self._reclaim_for(
+                self.pool.blocks_for(n_prompt)
+                * (1 if prof.prefix_shared else s_n)
+            )
         extra = self._request_extra(req)
         if prof.prefix_shared:
             tokens, length = self._pad_prompt(prompts[0])
@@ -622,11 +707,17 @@ class Scheduler:
             need = 1
         else:
             need = self.pool.blocks_for(n_prompt)
+        # cached-only blocks (prefix cache holds them, nobody reads them)
+        # are free-list overflow: admission reclaims the shortfall LRU-
+        # first before any assign/ensure pops the real free-list
+        free_b = self.pool.n_free_blocks
+        if self._pcache is not None:
+            free_b += self.pool.n_reclaimable_blocks
         if self.pool.n_active == 0:
             # idle pool: every block is free and one worst-case request is
             # guaranteed to fit — gating on the watermark here could wedge
-            return self.pool.n_free_blocks >= need
-        return self.pool.n_free_blocks >= need + 1
+            return free_b >= need
+        return free_b >= need + 1
 
     def _next_candidate(self, now: float):
         """(index, request) of the highest-priority ARRIVED request; stable
@@ -645,6 +736,9 @@ class Scheduler:
     def _admit(self, now: float) -> None:
         if self.policy == "fixed" and (self.active or self.groups):
             return  # run-to-completion: no refill until the pool drains
+        self.n_priority_boosts += age_waiting(
+            self.waiting, now, self.priority_boost_after
+        )
         while True:
             i, cand = self._next_candidate(now)
             if cand is None or not self._admissible(cand):
@@ -718,6 +812,73 @@ class Scheduler:
         replica to ONE t0 so merged TTFT/TPOT timestamps are comparable)."""
         self._t0 = t0
 
+    # ---- cross-request prefix cache (core/prefix_cache.py) ----------------
+    @hot_path
+    def _prefix_admit(self, slot: int, prompt: np.ndarray) -> int:
+        """Admission trie walk: adopt every cached leading full block of
+        ``prompt`` into ``slot``'s block table (refcounted sharing — zero
+        device KV work) and return the matched token count, i.e. where
+        the chunk cursor starts. The match is capped so >= 1 suffix token
+        always remains: the last prompt position's logits (the first
+        sampled token's input) are recomputed by the same mixed-step
+        executable cold serving uses, keeping hits bit-identical."""
+        self.n_prefix_lookups += 1
+        blocks = self._pcache.match(prompt)
+        if not blocks:
+            return 0
+        matched = len(blocks) * self.pool.block_size
+        self.pool.adopt(slot, blocks, matched)
+        self.n_prefix_hits += 1
+        self.n_prefix_tokens_skipped += matched
+        return matched
+
+    def _prefix_insert(self, slot: int, req: ServeRequest,
+                       n_written: Optional[int] = None) -> None:
+        """Refcount handoff at every slot-release site (finish, preempt):
+        hand the request's fully written prompt blocks to the trie BEFORE
+        ``pool.evict`` drops the slot's references, so they transit
+        owned -> cached without visiting the free-list. ``n_written``
+        caps the insertable span for half-prefilled cursors (only
+        positions the chunks actually wrote). Re-inserting blocks the
+        trie already holds — including a replayed request hitting blocks
+        it itself inserted before preemption — is a clean no-op: the
+        incumbent node wins and the duplicate (or self-same) block just
+        loses this slot's reference in the eviction that follows."""
+        if self._pcache is None or req.extra_inputs:
+            return
+        prompt = self._trim_prompt(req.prompt)
+        n = len(prompt) if n_written is None else min(n_written, len(prompt))
+        n_full = n // self.pool.block_size
+        if n_full <= 0:
+            return
+        self._pcache.insert(
+            prompt, self.pool.owned_blocks(slot)[:n_full], self.pool
+        )
+
+    def _reclaim_for(self, need: int) -> None:
+        """Make ``need`` blocks REALLY free for a path that pops the
+        free-list directly (dense/group ``assign``): reclaim the
+        shortfall from the prefix cache's LRU leaves."""
+        if self._pcache is not None:
+            short = need - self.pool.n_free_blocks
+            if short > 0:
+                self._pcache.reclaim(self.pool, short)
+
+    @hot_path
+    def _ensure_or_reclaim(self, slot: int, kv_len: int,
+                           writable: bool = False) -> bool:
+        """``BlockPool.ensure``/``ensure_writable`` with the prefix cache
+        as the FIRST line of out-of-blocks back-pressure: when the
+        free-list runs dry, LRU-reclaim cached-only blocks and retry;
+        only when the trie has nothing reclaimable does the caller fall
+        back to preemption. Keeps the preemption ladder's termination
+        argument intact — reclaim strictly grows the free-list."""
+        grow = self.pool.ensure_writable if writable else self.pool.ensure
+        while not grow(slot, kv_len):
+            if self._pcache is None or not self._pcache.reclaim(self.pool, 1):
+                return False
+        return True
+
     # ---- paged back-pressure ---------------------------------------------
     def _victim(self):
         """Preemption victim: the YOUNGEST request of the LOWEST priority
@@ -747,8 +908,14 @@ class Scheduler:
         else:
             if isinstance(st, ChunkCursor):
                 self.chunk_mgr.remove(st.slot)
+                # only the chunk-written span is insertable; its full
+                # blocks seed the trie so the replay (which may well be
+                # the very next admission) adopts them back — the
+                # refcount self-collision insert() handles
+                self._prefix_insert(st.slot, st.req, n_written=st.pos)
             else:
                 del self.active[st.slot]
+                self._prefix_insert(st.slot, st.req)
             self.pool.evict(st.slot)
             self._temp[st.slot] = 0.0
         st.req.tokens = []
@@ -780,7 +947,8 @@ class Scheduler:
                     continue  # already preempted while growing an older one
                 gone = False
                 for s in ent.slots:
-                    while not self.pool.ensure_writable(s, ent.kv_len):
+                    while not self._ensure_or_reclaim(s, ent.kv_len,
+                                                      writable=True):
                         victim = self._victim()
                         self._preempt(victim)
                         if victim is ent:
@@ -794,7 +962,7 @@ class Scheduler:
                 tgt = ent.kv_len
                 if extra is not None:
                     tgt = tgt + extra[ent.slot]
-                while not self.pool.ensure(ent.slot, tgt):
+                while not self._ensure_or_reclaim(ent.slot, tgt):
                     victim = self._victim()
                     self._preempt(victim)
                     if victim is ent:
@@ -826,6 +994,8 @@ class Scheduler:
             self.peak_used_blocks = max(
                 self.peak_used_blocks, self.pool.n_used_blocks
             )
+        if self._pcache is not None:
+            self.cached_block_trace.append(self.pool.n_cached_blocks)
 
     def _harvest_stalls(self, now: float) -> None:
         """Close every admission gap opened since the last step: residents
@@ -852,6 +1022,7 @@ class Scheduler:
                 self.finished.append(st.req)
                 done.append(st.req)
                 del self.active[slot]
+                self._prefix_insert(slot, st.req)
                 self.pool.evict(slot)
                 self._temp[slot] = 0.0  # free slots decode greedy garbage
         return done
@@ -1021,6 +1192,7 @@ class Scheduler:
                 self.finished.append(st.req)
                 done.append(st.req)
                 del self.active[slot]
+                self._prefix_insert(slot, st.req)
                 self.pool.evict(slot)
                 self._temp[slot] = 0.0  # free slots decode greedy garbage
         return done
@@ -1117,7 +1289,8 @@ class Scheduler:
                                        skip=starved)
             kept = list(plan.chunks)
             newly = [ch.slot for ch in plan.chunks
-                     if not self.pool.ensure(ch.slot, ch.start + ch.t - 1)]
+                     if not self._ensure_or_reclaim(ch.slot,
+                                                    ch.start + ch.t - 1)]
             if not newly:
                 break
             starved.update(newly)
@@ -1190,6 +1363,7 @@ class Scheduler:
         if state.finished(first, self._eos(req)):
             req.t_done = now
             self.finished.append(req)
+            self._prefix_insert(cur.slot, req)
             self.pool.evict(cur.slot)
             self._temp[cur.slot] = 0.0
             return
@@ -1319,3 +1493,22 @@ class Scheduler:
         if not self.block_occupancy_trace:
             return 0.0
         return float(np.mean(self.block_occupancy_trace))
+
+    # ---- prefix-cache metrics (launch/serve.py report) --------------------
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of eligible chunked admissions that adopted >= 1
+        cached block."""
+        return self.n_prefix_hits / max(self.n_prefix_lookups, 1)
+
+    @property
+    def n_prefix_reclaimed(self) -> int:
+        return self._pcache.n_reclaimed_blocks if self._pcache else 0
+
+    @property
+    def mean_cached_blocks(self) -> float:
+        """Mean per-step count of blocks the prefix cache holds (the
+        cached-block occupancy the serve report prints)."""
+        if not self.cached_block_trace:
+            return 0.0
+        return float(np.mean(self.cached_block_trace))

@@ -136,10 +136,15 @@ class BlockPool(_PoolBase):
     - physical block 0 is the reserved garbage sink: never on the
       free-list, never in a live slot's table; freed slots' zeroed table
       rows route their pool-wide decode writes into it;
-    - every block in 1..num_blocks-1 is either on the block free-list
-      (refcount 0) or owned by >= 1 slots, its refcount equal to the
-      number of owning slots (without ``share``/``permute_group`` this
-      degenerates to the old exactly-one-owner rule);
+    - every block in 1..num_blocks-1 is in exactly one of THREE states:
+      **free** (on the block free-list, refcount 0, not cached), **held**
+      (owned by >= 1 slots and/or held by the cross-request prefix cache),
+      with refcount equal to the number of owning slots PLUS one if the
+      prefix cache holds it (``_cached``); a cached block with refcount 1
+      is *cached-only* — resident in device memory but owned by nobody,
+      the reclaimable overflow the prefix cache's LRU eviction returns to
+      the free-list under pressure (without ``share``/``permute_group``/
+      ``cache_ref`` this degenerates to the old exactly-one-owner rule);
     - a block is only ever WRITTEN while its refcount is 1: the write
       cursor's block is unshared copy-on-write by ``ensure_writable``,
       and fully-written shared prefix blocks are never revisited;
@@ -198,7 +203,13 @@ class BlockPool(_PoolBase):
 
         self._free_blocks: List[int] = list(range(1, num_blocks))  # heap; 0=sink
         self._owned: List[List[int]] = [[] for _ in range(slots)]
-        self._ref = np.zeros((num_blocks,), np.int32)  # owners per block
+        self._ref = np.zeros((num_blocks,), np.int32)  # holders per block
+        # third block state (core/prefix_cache.py): True while the
+        # cross-request prefix cache holds the block. A cached block
+        # carries ONE extra refcount on top of its slot owners, so the
+        # ordinary evict/truncate decrefs can never free it out from
+        # under the trie; cache_unref (LRU reclaim) drops that bit.
+        self._cached = np.zeros((num_blocks,), bool)
         self._bt_dirty = False
         self.n_cow_copies = 0  # copy-on-write unshares (device block copies)
 
@@ -222,6 +233,20 @@ class BlockPool(_PoolBase):
 
     def owned_blocks(self, slot: int) -> List[int]:
         return list(self._owned[slot])
+
+    @property
+    def n_cached_blocks(self) -> int:
+        """Blocks the cross-request prefix cache currently holds (shared
+        with slot owners or cached-only)."""
+        return int(self._cached.sum())
+
+    @property
+    def n_reclaimable_blocks(self) -> int:
+        """Cached blocks nobody owns (pool refcount 1 = the cache's own
+        reference): exactly the blocks the prefix cache's LRU reclaim can
+        return to the free-list, leaf chain by leaf chain — the
+        admission gate counts them as free-list overflow."""
+        return int((self._cached & (self._ref == 1)).sum())
 
     # ---- slot lifecycle --------------------------------------------------
     def assign(self, slot: int, row_cache: Any, length: int) -> None:
@@ -293,6 +318,56 @@ class BlockPool(_PoolBase):
         )
         self.n_cow_copies += 1
         return True
+
+    # ---- cross-request prefix sharing (core/prefix_cache.py) -------------
+    def adopt(self, slot: int, blocks: List[int], n_tokens: int) -> None:
+        """Admission-time cache hit: attach ``blocks`` (the trie's matched
+        full prompt blocks, logical order) to empty ``slot``'s table via
+        refcounted sharing — the paged-pool primitive behind near-free
+        prefill. The device length counter is pinned to ``n_tokens`` (=
+        ``len(blocks) * block_size``) immediately so any pool-wide decode
+        step that runs before the suffix's first chunk writes its garbage
+        at positions >= the adopted span (block indices past the adopted
+        blocks: sink or private growth blocks), never INSIDE a shared
+        cached block. Adopted blocks are never written by this slot at
+        all — chunked prefill resumes at the first uncached token, and
+        every later write lands at a strictly higher logical position —
+        so no copy-on-write is ever needed on the hit path."""
+        assert not self._owned[slot], "adopt into a slot that still owns blocks"
+        assert n_tokens == len(blocks) * self.block_size
+        for j, phys in enumerate(blocks):
+            assert self._cached[phys], "adopting a block the cache dropped"
+            self._ref[phys] += 1
+            self._owned[slot].append(phys)
+            self.block_tables[slot, j] = phys
+        self._bt_dirty = True
+        self.cache = kv_cache.set_slot_length(
+            self.cache, jnp.int32(slot), jnp.int32(n_tokens)
+        )
+
+    def cache_ref(self, phys: int) -> None:
+        """Refcount handoff, insert half: the prefix cache takes its own
+        reference on a block a finishing slot still owns — called BEFORE
+        the slot's eviction decref, so the block moves owned -> cached
+        without ever visiting the free-list."""
+        assert self._ref[phys] >= 1, "cache_ref on an unowned block"
+        assert not self._cached[phys], "block already cached"
+        self._cached[phys] = True
+        self._ref[phys] += 1
+
+    def cache_unref(self, phys: int) -> None:
+        """Drop the prefix cache's reference (LRU reclaim / trie reset):
+        the block returns to the free-list iff no slot still owns it."""
+        assert self._cached[phys], "cache_unref on an uncached block"
+        self._cached[phys] = False
+        self._ref[phys] -= 1
+        if self._ref[phys] == 0:
+            heapq.heappush(self._free_blocks, phys)
+
+    def is_sole_cached_ref(self, phys: int) -> bool:
+        """True while the prefix cache is ``phys``'s only holder — the
+        reclaimability test of the trie's LRU eviction."""
+        return bool(self._cached[phys]) and self._ref[phys] == 1
 
     def truncate(self, slot: int, kv_len: int) -> None:
         """Release the block-table suffix a rejected speculative window
@@ -387,6 +462,7 @@ class BlockPool(_PoolBase):
         self._free = list(range(self.slots))
         self._free_blocks = list(range(1, self.num_blocks))
         self._ref[:] = 0
+        self._cached[:] = False  # a stale PrefixCache must be reset with us
         self._bt_dirty = True
         self.cache = kv_cache.free_blocks(
             self.cache, jnp.ones((self.slots,), bool)

@@ -26,6 +26,16 @@ kind in the mix serves those requests as LayerSkip draft/verify windows
 (core/scheduler.py ``SpeculativeProfile``): up to ``--n-draft`` + 1
 tokens commit per pool step, token-identical to plain decoding, with
 acceptance-rate and tokens-per-step counters in the report.
+``--prefix-cache`` (with ``--chunked``) turns shared-prompt traffic into
+near-free prefill: a radix trie keyed by full-block spans of prompt
+tokens (core/prefix_cache.py) lets each admission adopt every cached
+block refcount-shared and prefill only the uncached suffix —
+bit-identical tokens at any temperature, reported as
+prefill-tokens-skipped / hit-rate / cached-block occupancy.
+``--shared-prefix N`` generates the matching trace (N system prompts
+reused Zipf-style under bursty Poisson arrivals), and ``--boost-after T``
+ages waiting requests (+1 priority per T seconds unadmitted) so
+low-priority requests cannot starve behind a hot high-priority queue.
 
 Reported per request: TTFT (arrival -> first token), TPOT (mean inter-
 token), e2e latency; aggregate: tokens/s, mean slot-occupancy (the
@@ -153,6 +163,71 @@ def poisson_trace(
     return reqs
 
 
+def shared_prefix_trace(
+    n_requests: int,
+    *,
+    n_prefixes: int,
+    prefix_len: int,
+    pad_to: int,
+    max_new_cap: int,
+    vocab_size: int,
+    arrival_rate: float,
+    zipf_a: float = 1.1,
+    burst_size: int = 4,
+    seed: int = 0,
+    temperature: float = 0.0,
+    top_p: float = 1.0,
+) -> List[ServeRequest]:
+    """Shared-system-prompt trace — the dominant production chat shape
+    and the workload the cross-request prefix cache (--prefix-cache)
+    exists for. ``n_prefixes`` distinct system prompts of ``prefix_len``
+    tokens are reused Zipf-style (prompt rank ``r`` drawn with
+    probability ``r**-zipf_a``, normalized — a few prompts dominate, a
+    long tail stays cold), each followed by a fresh random suffix of
+    1..(pad_to - prefix_len) tokens. Arrivals are bursty Poisson:
+    exponential gaps between bursts of 1..``burst_size`` requests that
+    land effectively simultaneously (1 ms apart), with the gap mean
+    scaled so the long-run rate stays ``arrival_rate``; rate <= 0 means
+    all arrive at t=0. Also meaningful under ``--replicas``: each
+    replica keeps its own independent trie, so fleet hit-rate depends on
+    placement locality, not just the trace."""
+    if not 0 < prefix_len < pad_to:
+        raise ValueError("need 0 < prefix_len < pad_to")
+    if n_prefixes < 1 or n_requests < 1:
+        raise ValueError("need n_prefixes >= 1 and n_requests >= 1")
+    rng = np.random.default_rng(seed)
+    prefixes = rng.integers(0, vocab_size, size=(n_prefixes, prefix_len))
+    ranks = np.arange(1, n_prefixes + 1, dtype=np.float64)
+    pmf = ranks ** -zipf_a
+    pmf /= pmf.sum()
+    max_suffix = pad_to - prefix_len
+    t, burst_left = 0.0, 0
+    reqs: List[ServeRequest] = []
+    for i in range(n_requests):
+        if arrival_rate > 0:
+            if burst_left == 0:
+                t += rng.exponential(burst_size / arrival_rate)
+                burst_left = int(rng.integers(1, burst_size + 1))
+            else:
+                t += 1e-3
+            burst_left -= 1
+        j = int(rng.choice(n_prefixes, p=pmf))
+        suffix = rng.integers(
+            0, vocab_size, size=int(rng.integers(1, max_suffix + 1))
+        )
+        reqs.append(
+            ServeRequest(
+                rid=i,
+                prompt=np.concatenate([prefixes[j], suffix]),
+                max_new=int(rng.integers(1, max_new_cap + 1)),
+                t_arrival=t if arrival_rate > 0 else 0.0,
+                temperature=temperature,
+                top_p=top_p,
+            )
+        )
+    return reqs
+
+
 def apply_profile_mix(
     requests: List[ServeRequest],
     mix: str,
@@ -248,7 +323,9 @@ def run_scheduler(
     eos_id: Optional[int] = None, policy: str = "continuous",
     paged: bool = False, block_size: int = 16,
     num_blocks: Optional[int] = None, chunked: bool = False,
-    prefill_budget: Optional[int] = None, seed: int = 0,
+    prefill_budget: Optional[int] = None,
+    prefix_cache: bool = False,
+    priority_boost_after: Optional[float] = None, seed: int = 0,
     replicas: Optional[int] = None, devices="auto",
     return_requests: bool = False,
 ):
@@ -268,13 +345,15 @@ def run_scheduler(
             slots=slots, pad_to=pad_to, max_new_cap=max_new_cap,
             eos_id=eos_id, policy=policy, paged=paged, block_size=block_size,
             num_blocks=num_blocks, chunked=chunked,
-            prefill_budget=prefill_budget, seed=seed,
+            prefill_budget=prefill_budget, prefix_cache=prefix_cache,
+            priority_boost_after=priority_boost_after, seed=seed,
             return_requests=return_requests,
         )
     sched = Scheduler(
         model, params, slots=slots, pad_to=pad_to, max_new_cap=max_new_cap,
         eos_id=eos_id, policy=policy, paged=paged, block_size=block_size,
         num_blocks=num_blocks, chunked=chunked, prefill_budget=prefill_budget,
+        prefix_cache=prefix_cache, priority_boost_after=priority_boost_after,
         base_key=jax.random.PRNGKey(seed),
     )
     t0 = time.perf_counter()
@@ -345,6 +424,19 @@ def run_scheduler(
             # (multi-stream profiles take the dense prefill path)
             full_prefills=sched.n_prefills,
         )
+    if prefix_cache:
+        m.update(
+            prefix_lookups=sched.n_prefix_lookups,
+            prefix_hits=sched.n_prefix_hits,
+            prefix_hit_rate=sched.prefix_hit_rate,
+            # prompt tokens served straight out of cached KV blocks — the
+            # prefill compute (and TTFT latency) the cache removed
+            prefill_tokens_skipped=sched.n_prefix_tokens_skipped,
+            prefix_blocks_reclaimed=sched.n_prefix_reclaimed,
+            mean_cached_blocks=sched.mean_cached_blocks,
+        )
+    if priority_boost_after is not None:
+        m.update(priority_boosts=sched.n_priority_boosts)
     if return_requests:
         return m, done
     return m
@@ -355,7 +447,8 @@ def _run_router(
     replicas: int, devices, slots: int, pad_to: int, max_new_cap: int,
     eos_id: Optional[int], policy: str, paged: bool, block_size: int,
     num_blocks: Optional[int], chunked: bool,
-    prefill_budget: Optional[int], seed: int, return_requests: bool,
+    prefill_budget: Optional[int], prefix_cache: bool,
+    priority_boost_after: Optional[float], seed: int, return_requests: bool,
 ):
     """Replica-routed arm of ``run_scheduler``: one shared queue over N
     data-parallel pools (core/router.py). ``tokens_per_s`` stays the real
@@ -372,7 +465,9 @@ def _run_router(
         model, params, replicas=replicas, devices=devices, slots=slots,
         pad_to=pad_to, max_new_cap=max_new_cap, eos_id=eos_id, paged=paged,
         block_size=block_size, num_blocks=num_blocks, chunked=chunked,
-        prefill_budget=prefill_budget, base_key=jax.random.PRNGKey(seed),
+        prefill_budget=prefill_budget, prefix_cache=prefix_cache,
+        priority_boost_after=priority_boost_after,
+        base_key=jax.random.PRNGKey(seed),
     )
     t0 = time.perf_counter()
     done = router.run(requests)
@@ -426,6 +521,17 @@ def _run_router(
             ),
             full_prefills=router.n_prefills,
         )
+    if prefix_cache:
+        m.update(
+            prefix_lookups=router.n_prefix_lookups,
+            prefix_hits=router.n_prefix_hits,
+            prefix_hit_rate=router.prefix_hit_rate,
+            prefill_tokens_skipped=router.n_prefix_tokens_skipped,
+            prefix_blocks_reclaimed=router.n_prefix_reclaimed,
+            mean_cached_blocks=router.mean_cached_blocks,
+        )
+    if priority_boost_after is not None:
+        m.update(priority_boosts=router.n_priority_boosts)
     if return_requests:
         return m, done
     return m
@@ -435,6 +541,7 @@ def warmup(model, params, *, slots: int, pad_to: int, max_new_cap: int,
            paged: bool = False, block_size: int = 16,
            num_blocks: Optional[int] = None, chunked: bool = False,
            prefill_budget: Optional[int] = None,
+           prefix_cache: bool = False,
            profile_mix: bool = False, n_beams: int = 2,
            speculative: bool = False, exit_layer: int = 1,
            n_draft: int = 4) -> None:
@@ -444,15 +551,19 @@ def warmup(model, params, *, slots: int, pad_to: int, max_new_cap: int,
     additionally warms the slot-group path: a beam group (beam-step top_k,
     CoW block copy / contiguous reorder) and a contrastive pair.
     ``speculative`` warms the draft/verify pair at the given
-    (exit_layer, n_draft) geometry."""
+    (exit_layer, n_draft) geometry. ``prefix_cache`` warms block
+    adoption (``kv_cache.set_slot_length`` at the adopt signature) by
+    serving a prompt twice — the replay hits the trie."""
     sched = Scheduler(
         model, params, slots=slots, pad_to=pad_to, max_new_cap=max_new_cap,
         paged=paged, block_size=block_size, num_blocks=num_blocks,
         chunked=chunked, prefill_budget=prefill_budget,
+        prefix_cache=prefix_cache,
     )
     rng = np.random.default_rng(0)
+    full_prompt = rng.integers(0, 8, size=pad_to)
     reqs = [
-        ServeRequest(rid=0, prompt=rng.integers(0, 8, size=pad_to), max_new=2),
+        ServeRequest(rid=0, prompt=full_prompt, max_new=2),
         ServeRequest(rid=1, prompt=rng.integers(0, 8, size=3), max_new=2),
     ]
     if profile_mix and slots >= max(n_beams, 2):
@@ -475,6 +586,9 @@ def warmup(model, params, *, slots: int, pad_to: int, max_new_cap: int,
             ),
         ))
     sched.run(reqs)
+    if prefix_cache:
+        # rid 0's prompt blocks are in the trie now; its twin ADOPTS them
+        sched.run([ServeRequest(rid=5, prompt=full_prompt, max_new=2)])
 
 
 def main(argv=None):
@@ -513,6 +627,28 @@ def main(argv=None):
                     help="early-exit draft depth for speculative requests")
     ap.add_argument("--n-draft", type=int, default=4,
                     help="draft tokens per speculative window")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cross-request radix prefix cache over KV blocks "
+                         "(requires --chunked): cached full prompt blocks "
+                         "are adopted refcount-shared at admission and "
+                         "only the uncached suffix is prefilled — tokens "
+                         "stay bit-identical to cold serving")
+    ap.add_argument("--shared-prefix", type=int, default=None, metavar="N",
+                    help="shared-system-prompt trace: N distinct prefixes "
+                         "reused Zipf(--zipf-a) across requests with "
+                         "bursty Poisson arrivals (default: i.i.d. "
+                         "paper-profile prompts)")
+    ap.add_argument("--prefix-len", type=int, default=64,
+                    help="system-prompt tokens per shared prefix "
+                         "(--shared-prefix)")
+    ap.add_argument("--zipf-a", type=float, default=1.1,
+                    help="Zipf exponent for prefix reuse: prefix rank r "
+                         "drawn with p ~ r**-a (--shared-prefix)")
+    ap.add_argument("--burst-size", type=int, default=4,
+                    help="max requests per arrival burst (--shared-prefix)")
+    ap.add_argument("--boost-after", type=float, default=None,
+                    help="SLA aging: +1 request priority per this many "
+                         "seconds spent waiting unadmitted (default: off)")
     ap.add_argument("--replicas", type=int, default=None,
                     help="data-parallel replica pools behind one shared "
                          "queue (core/router.py); each replica gets its "
@@ -531,19 +667,35 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.chunked and not args.paged:
         ap.error("--chunked requires --paged (chunks append into KV blocks)")
+    if args.prefix_cache and not args.chunked:
+        ap.error("--prefix-cache requires --chunked (the cursor must be "
+                 "able to start at the first uncached prompt token)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
     prof = data_mod.PAPER_PROFILES[args.profile]
-    ins, _ = data_mod.sample_lengths(prof, args.n_requests, seed=args.seed + 1)
-    pad_to = int(min(max(ins), 256))
-    reqs = poisson_trace(
-        prof, args.n_requests, pad_to=pad_to, max_new_cap=args.max_new,
-        vocab_size=cfg.vocab_size, arrival_rate=args.arrival_rate,
-        seed=args.seed, temperature=args.temperature, top_p=args.top_p,
-    )
+    if args.shared_prefix is not None:
+        pad_to = int(min(args.prefix_len * 2, 256))
+        reqs = shared_prefix_trace(
+            args.n_requests, n_prefixes=args.shared_prefix,
+            prefix_len=args.prefix_len, pad_to=pad_to,
+            max_new_cap=args.max_new, vocab_size=cfg.vocab_size,
+            arrival_rate=args.arrival_rate, zipf_a=args.zipf_a,
+            burst_size=args.burst_size, seed=args.seed,
+            temperature=args.temperature, top_p=args.top_p,
+        )
+    else:
+        ins, _ = data_mod.sample_lengths(
+            prof, args.n_requests, seed=args.seed + 1
+        )
+        pad_to = int(min(max(ins), 256))
+        reqs = poisson_trace(
+            prof, args.n_requests, pad_to=pad_to, max_new_cap=args.max_new,
+            vocab_size=cfg.vocab_size, arrival_rate=args.arrival_rate,
+            seed=args.seed, temperature=args.temperature, top_p=args.top_p,
+        )
     if args.profile_mix:
         mask_offset = None
         if getattr(cfg, "vlm", None) is not None:
@@ -569,11 +721,14 @@ def main(argv=None):
         max_new_cap=args.max_new, eos_id=args.eos_id, policy=args.policy,
         paged=args.paged, block_size=args.block_size,
         num_blocks=args.num_blocks, chunked=args.chunked,
-        prefill_budget=args.prefill_budget, seed=args.seed,
+        prefill_budget=args.prefill_budget,
+        prefix_cache=args.prefix_cache,
+        priority_boost_after=args.boost_after, seed=args.seed,
         replicas=args.replicas,
     )
     mode = args.policy + ("/paged" if args.paged else "") + (
         "/chunked" if args.chunked else "") + (
+        "/pfx" if args.prefix_cache else "") + (
         "/mix" if args.profile_mix else "") + (
         f"/x{args.replicas}" if args.replicas is not None else "")
     print(f"[serve/{mode}] {m['n_requests']} requests in "
@@ -595,6 +750,14 @@ def main(argv=None):
               f"chunks={m['prefill_chunks']} "
               f"({m['prefill_chunk_tokens']} tokens) | "
               f"full prefills={m['full_prefills']}")
+    if args.prefix_cache:
+        print(f"[serve/{mode}] prefix hits={m['prefix_hits']}/"
+              f"{m['prefix_lookups']} (rate={m['prefix_hit_rate']:.2f}) | "
+              f"prefill tokens skipped={m['prefill_tokens_skipped']} | "
+              f"cached blocks mean={m['mean_cached_blocks']:.1f} | "
+              f"reclaimed={m['prefix_blocks_reclaimed']}")
+    if args.boost_after is not None:
+        print(f"[serve/{mode}] priority boosts={m['priority_boosts']}")
     if args.profile_mix and "group_admissions" in m:
         print(f"[serve/{mode}] slot groups={m['group_admissions']} | "
               f"cache reorders={m['cache_reorders']} | "

@@ -16,7 +16,16 @@ Locks down the BlockPool contract from core/slot_pool.py / core/kv_cache.py
 - a rejected speculative window's rollback (ISSUE 7: block-table
   truncation + free, no device program) conserves the free-list and
   leaves the pool read-identical to the dense mirror, including when
-  the commit point lands mid-block (partial-block tail).
+  the commit point lands mid-block (partial-block tail);
+- the cross-request prefix cache (ISSUE 9: core/prefix_cache.py radix
+  trie + the pool's third block state) preserves all of it under random
+  admit/finish/evict/reclaim interleavings: refcount conservation
+  across free / owned / cached (every usable block in exactly one
+  aggregate state, pool refcount == slot owners + cached bit), sink
+  block 0 never adopted or cached, per-slot exactly-once ownership with
+  cross-slot sharing ONLY through the trie, the trie's node set always
+  equal to the cached-bit set, and adopted prefixes read back through
+  the block table bit-identically to the dense mirror.
 
 Property tests run under hypothesis when installed (tests/_hyp.py shim)
 and as fixed-seed unit sequences otherwise.
@@ -31,6 +40,7 @@ import pytest
 from tests._hyp import given, hst, settings
 from repro.configs import SMOKE_CONFIGS
 from repro.core import engine, kv_cache, sampling
+from repro.core.prefix_cache import PrefixCache
 from repro.core.scheduler import Scheduler, ServeRequest
 from repro.core.slot_pool import BlockPool, SlotPool
 from repro.models import attention as A
@@ -80,6 +90,22 @@ class _Mirror:
         self.dense = np.zeros((SLOTS, s_log, 1, 2), np.float32)
         self.kv_len = {}  # active slot -> tokens written
         self.dev_lengths = np.zeros((SLOTS,), np.int32)
+        # cross-request prefix cache over the same pool: admit_cached
+        # serves shared-prefix prompts through it, evict hands their full
+        # prompt blocks back to the trie (scheduler._prefix_insert)
+        self.pcache = PrefixCache(BS)
+        self.tokens = {}  # cached-admitted slot -> its prompt tokens
+        prng = np.random.default_rng(7)
+        self.prefixes = [prng.integers(0, 40, size=BS),
+                         prng.integers(0, 40, size=2 * BS)]
+
+    @staticmethod
+    def _content(tokens) -> np.ndarray:
+        """Deterministic token -> K map standing in for prefill: identical
+        token spans yield identical block contents — the invariant real
+        deterministic prefill gives the trie its exactness."""
+        t = np.asarray(tokens, np.float32)
+        return np.stack([t, -t], axis=-1)[:, None, :]
 
     # ---- ops -------------------------------------------------------------
     def admit(self, rng) -> bool:
@@ -123,10 +149,71 @@ class _Mirror:
         if not self.kv_len:
             return False
         slot = int(rng.choice(sorted(self.kv_len)))
+        prompt = self.tokens.pop(slot, None)
+        if prompt is not None:
+            # scheduler._prefix_insert: full prompt blocks hand over to
+            # the trie (refcount handoff) BEFORE the eviction decref —
+            # a replayed/adopted prompt re-inserting its own blocks is a
+            # no-op (refcount self-collision)
+            n_full = len(prompt) // BS
+            if n_full:
+                self.pcache.insert(
+                    prompt, self.pool.owned_blocks(slot)[:n_full], self.pool
+                )
         self.pool.evict(slot)
         del self.kv_len[slot]
         self.dev_lengths[slot] = 0
         return True
+
+    def admit_cached(self, rng) -> bool:
+        """Admission through the radix trie, exactly as the scheduler's
+        _prefix_admit + chunked suffix prefill compose: match the shared
+        prefix, adopt its cached full blocks refcount-shared, allocate
+        and write ONLY the uncached suffix (reclaiming LRU cached blocks
+        instead of failing — _ensure_or_reclaim), and remember the
+        prompt so eviction hands the blocks back to the trie."""
+        pool = self.pool
+        if pool.n_free == 0:
+            return False
+        prefix = self.prefixes[int(rng.integers(len(self.prefixes)))]
+        sfx = rng.integers(0, 40, size=int(rng.integers(1, BS + 1)))
+        prompt = np.concatenate([prefix, sfx]).astype(np.int32)
+        length = len(prompt)
+        blocks = self.pcache.match(prompt)
+        matched = len(blocks) * BS
+        slot = pool.acquire()
+        if blocks:
+            pool.adopt(slot, blocks, matched)
+        while not pool.ensure(slot, length - 1):
+            if not self.pcache.reclaim(pool, 1):
+                pool.evict(slot)  # out of blocks: abort the admission
+                return False
+        pool.sync()
+        w = length - matched
+        new = np.zeros((SLOTS, w, 1, 2), np.float32)
+        new[slot] = self._content(prompt[matched:])
+        t_new = np.zeros((SLOTS,), np.int32)
+        t_new[slot] = w
+        lengths = np.array(self.dev_lengths)
+        lengths[slot] = matched
+        layer = pool.cache["layers"][0]
+        pool.cache["layers"][0] = {
+            "k": A.paged_write_chunk(layer["k"], jnp.asarray(new),
+                                     pool.cache["block_tables"],
+                                     jnp.asarray(lengths),
+                                     jnp.asarray(t_new)),
+            "v": layer["v"],
+        }
+        self.dense[slot] = 0.0
+        self.dense[slot, :length] = self._content(prompt)
+        self.kv_len[slot] = length
+        self.dev_lengths[slot] = length
+        self.tokens[slot] = prompt
+        return True
+
+    def reclaim(self, rng) -> None:
+        """Back-pressure reclaim: drop up to n LRU cached-only leaves."""
+        self.pcache.reclaim(self.pool, int(rng.integers(1, 3)))
 
     def spec_window(self, rng) -> bool:
         """A draft/verify window plus its rejection rollback, exactly as
@@ -172,11 +259,37 @@ class _Mirror:
     def check(self) -> None:
         pool = self.pool
         owned = [b for s in range(SLOTS) for b in pool.owned_blocks(s)]
-        assert len(owned) == len(set(owned)), "double-allocated block"
+        cached = [p for p in range(pool.num_blocks) if pool._cached[p]]
+        free = list(pool._free_blocks)
         assert 0 not in owned, "sink block 0 handed out"
-        assert sorted(owned + list(pool._free_blocks)) == list(
+        assert 0 not in cached, "sink block 0 cached"
+        for s in range(SLOTS):
+            bs_ = pool.owned_blocks(s)
+            assert len(bs_) == len(set(bs_)), "slot owns a block twice"
+        own_n = {}
+        for b in owned:
+            own_n[b] = own_n.get(b, 0) + 1
+        for phys, n in own_n.items():
+            if n > 1:  # cross-slot sharing happens ONLY through the trie
+                assert pool._cached[phys], "shared block outside the trie"
+        # refcount conservation across the third state: the pool refcount
+        # is exactly slot-owners + the cached bit, and free <=> refcount 0
+        for phys in range(1, pool.num_blocks):
+            want = own_n.get(phys, 0) + (1 if pool._cached[phys] else 0)
+            assert pool._ref[phys] == want, f"refcount drift at block {phys}"
+        assert sorted(set(owned) | set(cached) | set(free)) == list(
             range(1, pool.num_blocks)
-        ), "block leaked or duplicated (free-list conservation)"
+        ), "block leaked or duplicated (free/owned/cached conservation)"
+        assert not set(free) & (set(owned) | set(cached)), (
+            "free-list overlaps a held block"
+        )
+        # the trie's node set IS the cached-bit set (no orphan either way)
+        trie, stack = [], list(self.pcache.root.children.values())
+        while stack:
+            node = stack.pop()
+            trie.append(node.phys)
+            stack.extend(node.children.values())
+        assert sorted(trie) == sorted(cached), "trie/cached-bit drift"
         for s in range(SLOTS):
             if s not in self.kv_len:
                 assert not pool.owned_blocks(s)
@@ -212,14 +325,22 @@ def _run_ops(ops, seed: int) -> None:
                 mirror.evict(rng)
         elif op == 2:
             mirror.evict(rng)
-        else:
+        elif op == 3:
             mirror.spec_window(rng)
+        elif op == 4:
+            mirror.admit_cached(rng)
+        else:
+            mirror.reclaim(rng)
         mirror.check()
-    # drain: every block must come home
+    # drain: cached-admitted slots hand their prompt blocks to the trie,
+    # the trie reset releases them — then every block must come home
     for slot in list(mirror.kv_len):
-        pool.evict(slot)
+        mirror.evict(np.random.default_rng(slot))
+    mirror.check()
+    mirror.pcache.reset(pool)
     assert sorted(pool._free_blocks) == list(range(1, NB))
     assert sorted(pool._free) == list(range(SLOTS))
+    assert not np.any(pool._cached) and not np.any(pool._ref[1:])
 
 
 def test_block_pool_fixed_sequences():
@@ -228,16 +349,22 @@ def test_block_pool_fixed_sequences():
     _run_ops([0, 1, 1, 1, 1, 1, 1, 1, 1, 0, 2, 0, 1, 2], seed=1)
     # speculative windows interleaved with decode/evict (ISSUE 7 satellite)
     _run_ops([0, 0, 3, 1, 3, 3, 2, 0, 3, 1, 3, 2, 3, 3], seed=2)
+    # cached admissions: insert-on-evict, re-admit hits, LRU reclaim
+    # under pressure, mixed with plain admissions and decode (ISSUE 9)
+    _run_ops([4, 1, 2, 4, 4, 1, 2, 2, 4, 1, 4, 2, 5, 4, 2, 5], seed=3)
+    _run_ops([4, 2, 4, 2, 4, 2, 4, 2, 5, 5, 4, 0, 1, 2, 2, 4, 2], seed=4)
+    _run_ops([4, 4, 4, 2, 2, 2, 4, 3, 1, 4, 0, 1, 2, 2, 4, 5, 2, 2], seed=5)
 
 
 @settings(max_examples=25, deadline=None)
-@given(hst.lists(hst.integers(min_value=0, max_value=3), max_size=40),
+@given(hst.lists(hst.integers(min_value=0, max_value=5), max_size=40),
        hst.integers(min_value=0, max_value=2**31 - 1))
 def test_block_pool_property(ops, seed):
-    """Random assign/step/evict/spec-window interleavings preserve every
-    invariant — in particular a rejected speculative window's truncation
-    conserves the block free-list and leaves the pool read-identical to
-    the dense mirror."""
+    """Random assign/step/evict/spec-window/cached-admit/reclaim
+    interleavings preserve every invariant — in particular a rejected
+    speculative window's truncation conserves the block free-list, the
+    prefix cache's third block state conserves refcounts, and the pool
+    stays read-identical to the dense mirror."""
     _run_ops(ops, seed)
 
 

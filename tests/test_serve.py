@@ -245,6 +245,76 @@ def test_priority_orders_admission(llama):
     assert [d.rid for d in done] == [1, 2, 0, 3]  # priority, then FIFO
 
 
+def test_age_waiting_boosts_once_per_interval():
+    """Unit contract of scheduler.age_waiting: +1 priority per FULL
+    boost_after interval waited, idempotent across repeated calls at the
+    same clock (n_boosts remembers grants — requeue/replay safe), and
+    inert for requests that have not arrived yet or when disabled."""
+    from repro.core.scheduler import age_waiting
+
+    def reqs():
+        return [
+            ServeRequest(rid=0, prompt=np.array([1]), max_new=1,
+                         t_arrival=0.0),
+            ServeRequest(rid=1, prompt=np.array([1]), max_new=1,
+                         t_arrival=0.04, priority=2),
+            ServeRequest(rid=2, prompt=np.array([1]), max_new=1,
+                         t_arrival=9.0),  # future: the sorted-prefix stop
+        ]
+
+    waiting = reqs()
+    assert age_waiting(waiting, 0.05, None) == 0  # disabled
+    assert age_waiting(waiting, 0.05, 0.02) == 2  # rid0: +2, rid1: +0
+    assert [r.priority for r in waiting] == [2, 2, 0]
+    assert age_waiting(waiting, 0.05, 0.02) == 0  # idempotent at same now
+    assert age_waiting(waiting, 0.09, 0.02) == 4  # rid0 -> 4, rid1 -> 2
+    assert [r.priority for r in waiting] == [4, 4, 0]
+    assert [r.n_boosts for r in waiting] == [4, 2, 0]
+
+
+def test_aging_prevents_starvation(llama):
+    """ISSUE 9 satellite: max-waiting-time priority boosts in admission.
+    A lone priority-0 request facing a steady priority-2 arrival stream
+    starves to the very back without aging (every arrived stream request
+    outranks it at each slot-free instant); with priority_boost_after
+    set, its accrued wait outranks later arrivals and it finishes well
+    before the stream drains."""
+    model, params = llama
+
+    def trace():
+        r = np.random.default_rng(11)
+
+        def mk(rid, priority, t):
+            return ServeRequest(
+                rid=rid, prompt=r.integers(0, model.config.vocab_size, size=4),
+                max_new=4, priority=priority, t_arrival=t,
+            )
+
+        # stream pressure: inter-arrival (2 ms) < per-request service
+        # time (>= 5 device programs), so the plain arm's queue always
+        # holds an arrived priority-2 candidate
+        return [mk(0, 0, 0.0)] + [
+            mk(i, 2, 0.002 * (i - 1)) for i in range(1, 11)
+        ]
+
+    def run(boost):
+        sched = Scheduler(model, params, slots=1, pad_to=PAD_TO,
+                          max_new_cap=4, priority_boost_after=boost)
+        done = sched.run(trace())
+        return [d.rid for d in done], sched
+
+    order_plain, sched_plain = run(None)
+    assert order_plain[-1] == 0, "stream should starve the p0 request"
+    assert sched_plain.n_priority_boosts == 0
+    order_aged, sched_aged = run(0.002)
+    pos = order_aged.index(0)
+    assert pos < len(order_aged) - 1, "aging must break the starvation"
+    # after ~2 intervals of waiting, rid 0 outranks every stream request
+    # that arrived >= 2 intervals after it — i.e. all but the first few
+    assert pos <= 4
+    assert sched_aged.n_priority_boosts > 0
+
+
 def test_preemption_victim_is_youngest_lowest_priority(llama):
     """Satellite: the preemption ladder targets the LOWEST priority class
     and the youngest request inside it — never the high-priority slot."""
