@@ -57,6 +57,19 @@ allocation differ:
               would wall-clock) scales >= 1.6x over a one-replica
               router, and zero recompiles (replicas replay the same
               shape-keyed executables)
+  tp          the SAME traces served single-device vs by ONE pool whose
+              executables + KV cache are sharded over a TP-device
+              ("model",) mesh (distributed/tp_pool.py): head-sharded
+              attention, column/row-sharded FFN, the KV pool physically
+              split 1/TP per device behind host-side block tables.
+              Gates: token identity at temperature 0 AND 0.8 across the
+              chunked, plain-paged, speculative and prefix-cache arms,
+              per-device reserved KV bytes <= 0.6x the single pool,
+              zero recompiles on a second same-geometry trace, and
+              host-sync parity per step (the one-device_get idiom
+              survives the mesh). With --replicas: the DP x TP
+              composition gate — a 2-replica router on disjoint
+              2-device submeshes, token-identical to one plain pool
 
 Rows report tokens/s, mean slot-occupancy, the continuous/fixed speedup,
 and the paged arm's reserved-KV-bytes ratio vs contiguous (the gate:
@@ -80,6 +93,8 @@ tax and paged reservations actually go unused under contiguous slots.
       --speculative
   PYTHONPATH=src python benchmarks/bench_serve.py --smoke --prefix-cache
   PYTHONPATH=src python benchmarks/bench_serve.py --smoke --replicas
+  PYTHONPATH=src python benchmarks/bench_serve.py --smoke --tp 2
+  PYTHONPATH=src python benchmarks/bench_serve.py --smoke --tp 2 --replicas
 """
 from __future__ import annotations
 
@@ -90,17 +105,25 @@ import sys
 # The replica leg pins each replica's params + KV cache to its own XLA
 # device when several exist; forcing extra host-platform devices only
 # takes effect BEFORE the backend initializes, hence before `import jax`.
-# Single-device hosts still pass the leg (replicas time-share the device;
-# the aggregate gate uses device-busy accounting), this just makes the
-# device-placement seam real wherever the flag is honored.
-if "--replicas" in sys.argv and (
-    "xla_force_host_platform_device_count"
-    not in os.environ.get("XLA_FLAGS", "")
+# Single-device hosts still pass the replica leg (replicas time-share the
+# device; the aggregate gate uses device-busy accounting), this just
+# makes the device-placement seam real wherever the flag is honored. The
+# tensor-parallel leg (--tp) and the full snapshot NEED a real mesh, so
+# they force 4 devices (enough for the DP x TP composition gate: two
+# disjoint 2-device submeshes); a user-supplied XLA_FLAGS always wins.
+if "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""
 ):
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "")
-        + " --xla_force_host_platform_device_count=2"
-    ).strip()
+    _n_dev = None
+    if "--tp" in sys.argv or "--snapshot" in sys.argv:
+        _n_dev = 4
+    elif "--replicas" in sys.argv:
+        _n_dev = 2
+    if _n_dev is not None:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={_n_dev}"
+        ).strip()
 
 import jax
 
@@ -134,6 +157,10 @@ PREFILL_BUDGET = 4
 # replica leg: data-parallel pools behind one shared queue (each replica
 # gets its own SLOTS-slot / NUM_BLOCKS-block pool)
 REPLICAS = 2
+# tensor-parallel leg: one pool's executables + KV cache sharded over a
+# TP-device ("model",) mesh (distributed/tp_pool.py); the composition
+# gate runs REPLICAS x TP pools on disjoint submeshes
+TP = 2
 
 
 _MODEL = None
@@ -675,6 +702,260 @@ def _prefix_cache_gate(n_requests: int = 20, seed: int = 0,
     return ok, stats
 
 
+def _tp_gate(n_requests: int = 12, arrival_rate: float = 200.0,
+             seed: int = 0, tp: int = TP, verbose: bool = True):
+    """The tensor-parallel leg (--tp): the SAME traces served by one
+    single-device paged pool vs one pool whose executables + KV cache are
+    sharded over a tp-device ("model",) mesh (distributed/tp_pool.py).
+    Every sub-gate is deterministic — nothing here reads the wall clock,
+    so nothing is retried:
+
+    (1) token identity at temperature 0 AND 0.8 across the serving
+        surface: chunked prefill, plain paged decode, the speculative
+        draft/verify mix, and the prefix-cache arm (warm hits adopt
+        sharded blocks) — row-sharded psum changes logits in the last
+        ulp, so the invariant is token-level, which argmax/top-p survive;
+    (2) per-device reserved KV bytes <= 0.6x the single-device pool (the
+        pool is physically split over the head axis, 1/tp per device
+        plus replicated lengths/block-table bookkeeping);
+    (3) zero recompiles across a second same-geometry TP trace — the
+        sharded executables are shape-keyed exactly like their twins;
+    (4) zero new host syncs per step: a rate-0 trace steps the TP pool
+        with the SAME jax.device_get count and step count as the
+        single-device pool (the one-device_get idiom survives the mesh).
+    Returns (ok, stats)."""
+    from repro.analysis import trace_audit
+
+    if jax.device_count() < tp:
+        raise SystemExit(
+            f"--tp {tp} needs {tp} XLA devices, found {jax.device_count()} "
+            "(the bench forces --xla_force_host_platform_device_count=4 "
+            "unless XLA_FLAGS is already set — unset it or raise the count)")
+
+    model, params = _smoke_model()
+    cfg = model.config
+    prof = data_mod.PAPER_PROFILES[PROFILE]
+    max_new_cap = 32  # decode-heavy trace, short enough for CI
+    geom = dict(slots=SLOTS, pad_to=PAD_TO, max_new_cap=max_new_cap,
+                block_size=BLOCK_SIZE, num_blocks=NUM_BLOCKS,
+                chunked=True, prefill_budget=PREFILL_BUDGET)
+
+    def run(tp_arm, requests, **kw):
+        m, done = serve.run_scheduler(
+            model, params, requests, policy="continuous", seed=seed,
+            paged=True, tp=tp_arm, return_requests=True, **kw)
+        return m, {r.rid: list(r.tokens) for r in done}
+
+    def trace(temperature: float, rate: float = arrival_rate,
+              trace_seed: int = seed):
+        return serve.poisson_trace(
+            prof, n_requests, pad_to=PAD_TO, max_new_cap=max_new_cap,
+            vocab_size=cfg.vocab_size, arrival_rate=rate, seed=trace_seed,
+            temperature=temperature,
+            top_p=0.9 if temperature > 0 else 1.0)
+
+    # --- (1) identity arms, all deterministic ---------------------------
+    identical = {}
+
+    # chunked prefill at both temperatures (the main serving geometry)
+    m_single = m_tp = None
+    for temperature in (0.0, 0.8):
+        ms, tok_single = run(None, trace(temperature), **geom)
+        mt, tok_tp = run(tp, trace(temperature), **geom)
+        identical[f"chunked_t{temperature}"] = (
+            tok_tp == tok_single and len(tok_single) == n_requests)
+        if temperature == 0.0:
+            m_single, m_tp = ms, mt
+
+    # plain paged decode (no chunk cursor in front of prefill)
+    pg = {k: v for k, v in geom.items()
+          if k not in ("chunked", "prefill_budget")}
+    _, tok_single = run(None, trace(0.0), **pg)
+    _, tok_tp = run(tp, trace(0.0), **pg)
+    identical["paged_t0.0"] = (
+        tok_tp == tok_single and len(tok_single) == n_requests)
+
+    # speculative draft/verify windows under sampling: a greedy +
+    # speculative class mix rides the tp_draft_window/tp_verify_step pair
+    spec_trace = lambda: serve.mix_class_trace(  # noqa: E731
+        prof, n_requests, pad_to=PAD_TO, max_new_cap=max_new_cap,
+        vocab_size=cfg.vocab_size, arrival_rate=arrival_rate,
+        classes=("greedy", "speculative"), seed=seed, temperature=0.8)
+    _, tok_single = run(None, spec_trace(), **geom)
+    _, tok_tp = run(tp, spec_trace(), **geom)
+    identical["speculative_t0.8"] = (
+        tok_tp == tok_single and len(tok_single) == n_requests)
+
+    # prefix-cache hits adopt SHARDED blocks: the dedicated small-block
+    # geometry from _prefix_cache_gate, warm arms only, both temperatures.
+    # All-at-t=0 arrivals keep admission ORDER — and therefore the hit
+    # count — deterministic: under wall-clock arrivals the (slower) TP
+    # pool sees deeper queues, which reorders trie insert-vs-match races
+    # and moves prefix_hits even though tokens never change
+    pf_block, pf_pad, pf_prefix = 4, 24, 16
+    pf_geom = dict(slots=SLOTS, pad_to=pf_pad, max_new_cap=8,
+                   block_size=pf_block, num_blocks=48, chunked=True,
+                   prefill_budget=8, prefix_cache=True)
+    for temperature in (0.0, 0.8):
+        pf_trace = lambda: serve.shared_prefix_trace(  # noqa: E731
+            n_requests, n_prefixes=2, prefix_len=pf_prefix, pad_to=pf_pad,
+            max_new_cap=8, vocab_size=cfg.vocab_size, arrival_rate=0.0,
+            zipf_a=1.1, burst_size=4, seed=seed, temperature=temperature,
+            top_p=0.9 if temperature > 0 else 1.0)
+        mps, tok_single = run(None, pf_trace(), **pf_geom)
+        mpt, tok_tp = run(tp, pf_trace(), **pf_geom)
+        identical[f"prefix_t{temperature}"] = (
+            tok_tp == tok_single
+            and len(tok_single) == n_requests
+            and mpt["prefix_hits"] == mps["prefix_hits"]
+            and mpt["prefix_hits"] > 0)
+
+    # --- (2) per-device KV memory --------------------------------------
+    per_device = m_tp["kv_reserved_per_device_bytes"]
+    mem_ratio = per_device / max(m_single["kv_reserved_bytes"], 1)
+
+    # --- (3) zero recompiles across a second same-geometry TP trace ----
+    jits = trace_audit.serving_jits()
+    sizes_before = trace_audit._cache_sizes(jits)
+    run(tp, trace(0.8, trace_seed=seed + 1), **geom)
+    recompiles = [
+        f"{name}: {sizes_before[name]} -> {n}"
+        for name, n in trace_audit._cache_sizes(jits).items()
+        if n != sizes_before[name]
+    ]
+
+    # --- (4) host-sync parity on a deterministic rate-0 trace ----------
+    real_get = jax.device_get
+    counts = [0]
+
+    def counting_get(x):
+        counts[0] += 1
+        return real_get(x)
+
+    jax.device_get = counting_get
+    try:
+        msync_single, _ = run(None, trace(0.0, rate=0.0), **geom)
+        syncs_single = counts[0]
+        counts[0] = 0
+        msync_tp, _ = run(tp, trace(0.0, rate=0.0), **geom)
+        syncs_tp = counts[0]
+    finally:
+        jax.device_get = real_get
+    sync_parity = (syncs_tp == syncs_single
+                   and msync_tp["decode_steps"] == msync_single["decode_steps"])
+
+    stats = dict(
+        tp=tp,
+        n_done=m_tp["n_requests"],
+        wall_s=m_tp["wall_s"],
+        decode_steps=m_tp["decode_steps"],
+        tokens_per_s=m_tp["tokens_per_s"],
+        kv_reserved_bytes_single=m_single["kv_reserved_bytes"],
+        kv_reserved_per_device_bytes=per_device,
+        kv_per_device_ratio=mem_ratio,
+        host_syncs_single=syncs_single,
+        host_syncs_tp=syncs_tp,
+        sync_steps_single=msync_single["decode_steps"],
+        sync_steps_tp=msync_tp["decode_steps"],
+        recompiles=recompiles,
+        token_identical=identical,
+    )
+    ok = (all(identical.values())
+          and m_tp["n_requests"] == n_requests
+          and mem_ratio <= 0.6
+          and not recompiles
+          and sync_parity)
+    if verbose:
+        print(f"single: {m_single['tokens_per_s']:8.1f} tok/s  "
+              f"steps={m_single['decode_steps']}  "
+              f"reserved={m_single['kv_reserved_bytes'] / 1e6:.1f}MB")
+        print(f"tp={tp}:   {m_tp['tokens_per_s']:8.1f} tok/s  "
+              f"steps={m_tp['decode_steps']}  "
+              f"reserved/device={per_device / 1e6:.1f}MB "
+              f"({mem_ratio:.2f}x single)  "
+              f"syncs {syncs_single} == {syncs_tp} "
+              f"over {msync_tp['decode_steps']} steps: {sync_parity}  "
+              f"recompiles={len(recompiles)}  "
+              f"token-identical={identical}")
+    return ok, stats
+
+
+def _tp_composition_gate(n_requests: int = 12, arrival_rate: float = 200.0,
+                         seed: int = 0, tp: int = TP,
+                         replicas: int = REPLICAS, verbose: bool = True):
+    """The DP x TP composition leg (--tp --replicas): a ReplicaRouter of
+    `replicas` pools, EACH sharded over its own disjoint tp-device
+    submesh, vs one plain single-device pool. Deterministic sub-gates:
+    (1) replica_devices(replicas, group_size=tp) hands out pairwise
+    disjoint device groups (a shared device would serialize two replicas
+    AND corrupt both pools' shardings); (2) router tokens identical to
+    the plain pool at temperature 0 and 0.8 — placement onto any
+    (replica, submesh) cell is invisible in output. Returns (ok, stats)."""
+    from repro.distributed import sharding
+
+    need = replicas * tp
+    if jax.device_count() < need:
+        raise SystemExit(
+            f"--tp {tp} --replicas needs {need} XLA devices, found "
+            f"{jax.device_count()} (the bench forces "
+            "--xla_force_host_platform_device_count=4 unless XLA_FLAGS is "
+            "already set)")
+
+    model, params = _smoke_model()
+    cfg = model.config
+    prof = data_mod.PAPER_PROFILES[PROFILE]
+    max_new_cap = 32
+
+    groups = sharding.replica_devices(replicas, group_size=tp)
+    flat = [d for g in groups for d in g]
+    disjoint = len(set(flat)) == len(flat)
+
+    def trace(temperature: float):
+        return serve.poisson_trace(
+            prof, n_requests, pad_to=PAD_TO, max_new_cap=max_new_cap,
+            vocab_size=cfg.vocab_size, arrival_rate=arrival_rate, seed=seed,
+            temperature=temperature,
+            top_p=0.9 if temperature > 0 else 1.0)
+
+    def run(n_replicas, tp_arm, temperature):
+        m, done = serve.run_scheduler(
+            model, params, trace(temperature), slots=SLOTS, pad_to=PAD_TO,
+            max_new_cap=max_new_cap, policy="continuous", seed=seed,
+            paged=True, block_size=BLOCK_SIZE, num_blocks=NUM_BLOCKS,
+            chunked=True, prefill_budget=PREFILL_BUDGET,
+            replicas=n_replicas, tp=tp_arm, return_requests=True)
+        return m, {r.rid: list(r.tokens) for r in done}
+
+    identical = {}
+    m_router = None
+    for temperature in (0.0, 0.8):
+        _, tok_single = run(None, None, temperature)
+        m_router, tok_router = run(replicas, tp, temperature)
+        identical[f"t{temperature}"] = (
+            tok_router == tok_single and len(tok_single) == n_requests)
+
+    stats = dict(
+        tp=tp,
+        n_replicas=replicas,
+        n_done=m_router["n_requests"],
+        wall_s=m_router["wall_s"],
+        device_groups=[[str(d) for d in g] for g in groups],
+        groups_disjoint=disjoint,
+        kv_reserved_per_device_bytes=m_router.get(
+            "kv_reserved_per_device_bytes"),
+        token_identical=identical,
+    )
+    ok = (disjoint and all(identical.values())
+          and m_router["n_requests"] == n_requests)
+    if verbose:
+        print(f"{replicas} replicas x tp={tp}: groups={stats['device_groups']} "
+              f"disjoint={disjoint}  "
+              f"reserved/device="
+              f"{(stats['kv_reserved_per_device_bytes'] or 0) / 1e6:.1f}MB  "
+              f"token-identical={identical}")
+    return ok, stats
+
+
 def _paged_decode_no_growth():
     """Satellite gate, delegated to repro.analysis.trace_audit (the
     generalization of the hand-rolled HLO scan this bench used to carry):
@@ -705,12 +986,15 @@ def _paged_decode_no_growth():
 def _snapshot(n_requests: int = N_REQUESTS, arrival_rate: float = 200.0,
               seed: int = 0) -> dict:
     """Perf-trajectory snapshot (checked in as benchmarks/BENCH_serve.json):
-    all four serving arms on the pinned smoke workload, plus the
+    all four serving arms on the pinned smoke workload, the speculative /
+    replica / prefix-cache / tensor-parallel gate stats, the
+    heterogeneous --mix-classes per-class latency breakdown, plus the
     repro.analysis counters that guard the hot path — per-executable
     donation/aliasing leaf counts and the recompile count across a second
     same-geometry trace (must stay 0). Wall-clock fields drift with the
     host; the structural fields (steps, token identity, donation counts,
-    recompiles) are the trajectory the checked-in history tracks."""
+    recompiles) are the trajectory the checked-in history tracks. Needs
+    >= TP XLA devices (the --snapshot CLI path forces 4)."""
     from repro.analysis import trace_audit
 
     model, params = _smoke_model()
@@ -730,6 +1014,23 @@ def _snapshot(n_requests: int = N_REQUESTS, arrival_rate: float = 200.0,
     _, replica_stats = _replica_gate(arrival_rate=arrival_rate, seed=seed,
                                      verbose=False)
     _, prefix_stats = _prefix_cache_gate(seed=seed, verbose=False)
+    _, tp_stats = _tp_gate(arrival_rate=arrival_rate, seed=seed,
+                           verbose=False)
+
+    # the heterogeneous SLA-class arm: the --mix-classes trace (bursty
+    # arrivals over greedy/sampling/beam/CFG/speculative requests)
+    # through the paged+chunked pool; the per-class p50/p99 TTFT/TPOT
+    # rows are the paper's Table-2-style latency breakdown
+    mix_m, _ = serve.run_scheduler(
+        model, params,
+        serve.mix_class_trace(
+            data_mod.PAPER_PROFILES[PROFILE], n_requests, pad_to=PAD_TO,
+            max_new_cap=MAX_NEW_CAP, vocab_size=model.config.vocab_size,
+            arrival_rate=arrival_rate, seed=seed),
+        slots=SLOTS, pad_to=PAD_TO, max_new_cap=MAX_NEW_CAP,
+        policy="continuous", seed=seed, paged=True, block_size=BLOCK_SIZE,
+        num_blocks=NUM_BLOCKS, chunked=True, prefill_budget=PREFILL_BUDGET,
+        return_requests=True)
 
     def clean(v):
         if isinstance(v, dict):
@@ -767,6 +1068,21 @@ def _snapshot(n_requests: int = N_REQUESTS, arrival_rate: float = 200.0,
                    if k != "recompiles"},
                 "recompiles": len(prefix_stats["recompiles"]),
             }),
+            "tp_pool": clean({
+                **{k: v for k, v in tp_stats.items()
+                   if k != "recompiles"},
+                "recompiles": len(tp_stats["recompiles"]),
+            }),
+            "mix_classes": clean({
+                "n_requests": mix_m["n_requests"],
+                "decode_steps": mix_m["decode_steps"],
+                "mixed_steps": mix_m["mixed_steps"],
+                "wall_s": mix_m["wall_s"],
+                "ttft_p50_ms": mix_m["ttft_p50_ms"],
+                "ttft_p99_ms": mix_m["ttft_p99_ms"],
+                "tpot_p50_ms": mix_m["tpot_p50_ms"],
+                "per_class": mix_m["per_class"],
+            }),
         },
         "derived": clean({
             "continuous_speedup":
@@ -781,6 +1097,8 @@ def _snapshot(n_requests: int = N_REQUESTS, arrival_rate: float = 200.0,
                     all(replica_stats["token_identical"].values()),
                 "prefix_cache_vs_cold":
                     all(prefix_stats["token_identical"].values()),
+                "tp_vs_single_device":
+                    all(tp_stats["token_identical"].values()),
             },
         }),
         "analysis": {
@@ -915,6 +1233,19 @@ def main(argv=None) -> int:
                          "token identity at temperature 0 and 0.8, >=1.6x "
                          "step balance AND busy-time aggregate tok/s over "
                          "one replica, and zero recompiles")
+    ap.add_argument("--tp", type=int, default=None, metavar="N",
+                    help="run ONLY the tensor-parallel leg: the same "
+                         "traces served single-device vs sharded over an "
+                         "N-device ('model',) mesh "
+                         "(distributed/tp_pool.py), gated on token "
+                         "identity at temperature 0 and 0.8 across the "
+                         "chunked, plain-paged, speculative and "
+                         "prefix-cache arms, per-device reserved KV "
+                         "bytes <= 0.6x the single pool, zero recompiles "
+                         "on a second same-geometry trace, and host-sync "
+                         "parity per step; with --replicas, run the "
+                         "DP x TP composition gate instead (disjoint "
+                         "submeshes + token identity)")
     ap.add_argument("--n-requests", type=int, default=N_REQUESTS)
     ap.add_argument("--arrival-rate", type=float, default=200.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -987,6 +1318,36 @@ def main(argv=None) -> int:
                           "served from cached blocks, strictly lower "
                           "median TTFT, zero reserved-byte delta, and "
                           "zero recompiles"))
+        return 0 if ok else 1
+
+    if args.tp:
+        if args.tp < 2:
+            ap.error("--tp needs >= 2 (the plain legs ARE the tp=1 path)")
+        if args.replicas:
+            # every sub-gate is deterministic: no retry
+            ok, _ = _tp_composition_gate(seed=args.seed,
+                                         arrival_rate=args.arrival_rate,
+                                         tp=args.tp)
+            if not args.smoke:
+                return 0
+            print("SMOKE " + ("PASS" if ok else
+                              "FAIL: need disjoint per-replica device "
+                              "groups and router tokens identical to the "
+                              "plain single-device pool at temperature 0 "
+                              "and 0.8"))
+            return 0 if ok else 1
+        # every sub-gate is deterministic: no retry
+        ok, _ = _tp_gate(seed=args.seed, arrival_rate=args.arrival_rate,
+                         tp=args.tp)
+        if not args.smoke:
+            return 0
+        print("SMOKE " + ("PASS" if ok else
+                          "FAIL: need sharded tokens identical to "
+                          "single-device at temperature 0 and 0.8 "
+                          "(chunked, paged, speculative and prefix-cache "
+                          "arms), per-device reserved KV bytes <= 0.6x "
+                          "the single pool, zero recompiles, and "
+                          "host-sync parity per step"))
         return 0 if ok else 1
 
     if args.replicas:

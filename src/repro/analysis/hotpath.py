@@ -39,6 +39,14 @@ HOT_PATHS = frozenset({
     # once per pool step while a SpeculativeProfile request is resident
     "repro.core.engine.verify_step",
     "repro.core.layerskip.draft_window",
+    # the tensor-parallel step family (distributed/tp_pool.py): the same
+    # per-token programs lowered onto a ("model",) mesh — one sharded
+    # executable each, replayed exactly like their single-device twins
+    "repro.core.engine.tp_prefill",
+    "repro.core.engine.tp_decode_step",
+    "repro.core.engine.tp_mixed_step",
+    "repro.core.engine.tp_verify_step",
+    "repro.core.layerskip.tp_draft_window",
     # the cross-request prefix cache's trie walks run once per admission
     # (match/insert) and inside the out-of-blocks back-pressure path
     # (reclaim) — pure host code, but on the admission hot path, so HS001

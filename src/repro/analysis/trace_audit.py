@@ -126,7 +126,13 @@ def audit_donation(lowered, *, exempt_args: Sequence[int] = (0,),
                     f"{label}: arg {i} leaf {leaf.shape}/{leaf.dtype} "
                     f"({_leaf_nbytes(leaf)}B) is not donated"
                 )
-    aliased = lowered.as_text().count("tf.aliasing_output")
+    text = lowered.as_text()
+    # single-device modules carry pre-resolved input->output aliases
+    # (tf.aliasing_output); sharded modules defer the pairing to compile
+    # time and mark donors with jax.buffer_donor instead — both mean the
+    # argument's buffer is surrendered to the executable
+    aliased = (text.count("tf.aliasing_output")
+               + text.count("jax.buffer_donor"))
     if aliased < required:
         fails.append(
             f"{label}: only {aliased} arguments aliased to outputs in the "
@@ -267,6 +273,14 @@ def serving_jits() -> Dict[str, object]:
         "engine.mixed_step": engine.mixed_step,
         "engine.verify_step": engine.verify_step,
         "layerskip.draft_window": layerskip.draft_window,
+        # the tensor-parallel twins (distributed/tp_pool.py): warmed only
+        # when a Scheduler(tp_mesh=...) serves, zero-size otherwise —
+        # held to the same no-recompile bar either way
+        "engine.tp_prefill": engine.tp_prefill,
+        "engine.tp_decode_step": engine.tp_decode_step,
+        "engine.tp_mixed_step": engine.tp_mixed_step,
+        "engine.tp_verify_step": engine.tp_verify_step,
+        "layerskip.tp_draft_window": layerskip.tp_draft_window,
         "kv_cache.write_slot": kv_cache.write_slot,
         "kv_cache.reset_slots": kv_cache.reset_slots,
         "kv_cache.append_block": kv_cache.append_block,
@@ -381,6 +395,64 @@ def lower_serving(model, params, *, paged: bool, slots: int = SLOTS,
     return out
 
 
+def lower_serving_tp(model, params, *, tp: int = 2, slots: int = SLOTS,
+                     pad_to: int = PAD_TO, max_new_cap: int = MAX_NEW_CAP,
+                     block_size: int = BLOCK_SIZE,
+                     num_blocks: int = NUM_BLOCKS,
+                     prefill_budget: int = PREFILL_BUDGET
+                     ) -> Dict[str, object]:
+    """Lower the tensor-parallel step family over a real ``tp``-device
+    mesh with COMMITTED sharded params + pool cache — the lowered
+    signatures (and their donation/aliasing) are exactly what a
+    ``Scheduler(tp_mesh=...)`` replays. Requires >= ``tp`` devices."""
+    import jax.numpy as jnp
+
+    from repro.core import engine, layerskip
+    from repro.core.slot_pool import BlockPool
+    from repro.distributed import tp_pool
+
+    max_len = pad_to + max_new_cap + 1
+    mesh = tp_pool.make_tp_mesh(tp)
+    pool = BlockPool(model, slots, max_len, block_size=block_size,
+                     num_blocks=num_blocks)
+    ctx = tp_pool.TPContext(model, params, mesh,
+                            cache_like=pool.cache, max_len=max_len)
+    cache = ctx.place_cache(pool.cache)
+    out = {
+        "tp_prefill": engine.tp_prefill.lower(
+            model, ctx.params, jnp.zeros((1, pad_to), jnp.int32),
+            jnp.ones((1,), jnp.int32), max_len, None,
+            row_shardings=ctx.row_static,
+        ),
+        "tp_decode_step": engine.tp_decode_step.lower(
+            model, ctx.params, cache, jnp.zeros((slots,), jnp.int32),
+            shardings=ctx.cache_static,
+        ),
+        "tp_mixed_step": engine.tp_mixed_step.lower(
+            model, ctx.params, cache,
+            jnp.zeros((slots, prefill_budget), jnp.int32),
+            jnp.zeros((slots,), jnp.int32),
+            jnp.zeros((slots,), jnp.int32),
+            shardings=ctx.cache_static,
+        ),
+        "tp_draft_window": layerskip.tp_draft_window.lower(
+            model, EXIT_LAYER, N_DRAFT, ctx.params, cache,
+            jnp.zeros((slots,), jnp.int32), jnp.zeros((slots,), jnp.int32),
+            jnp.zeros((slots,), jnp.int32),
+            shardings=ctx.cache_static,
+        ),
+        "tp_verify_step": engine.tp_verify_step.lower(
+            model, ctx.params, cache,
+            jnp.zeros((slots, N_DRAFT + 1), jnp.int32),
+            jnp.zeros((slots,), jnp.int32),
+            jnp.zeros((slots,), jnp.int32),
+            shardings=ctx.cache_static,
+        ),
+    }
+    out["_pool"] = pool
+    return out
+
+
 def run_trace_audit(verbose: bool = False,
                     include_recompiles: bool = True) -> List[str]:
     """Run the whole audit matrix on the bench_serve smoke config.
@@ -449,6 +521,22 @@ def run_trace_audit(verbose: bool = False,
             "mixed_step", "verify_step",
         ) else (unembed_f32,)
         fails += audit_dtypes(low, allow=allow16, label=label)
+
+    # tensor-parallel leg: the SAME donation / static-envelope / dtype
+    # bars over the sharded lowerings (global shapes in the pre-partition
+    # module, so the thresholds carry over unchanged). Skipped gracefully
+    # on single-device hosts — CI forces 4 host devices for this job.
+    if jax.device_count() >= 2:
+        lowered_tp = lower_serving_tp(model, params, tp=2)
+        lowered_tp.pop("_pool")
+        for name, low in lowered_tp.items():
+            label = f"tp2/{name}"
+            say(f"lowered {label}")
+            fails += audit_donation(low, exempt_args=(0,), label=label)
+            fails += audit_no_growth(low, label=label)
+            fails += audit_dtypes(low, label=label)
+    else:
+        say("single device: skipping the tp2 lowering leg")
 
     if include_recompiles:
         say("serving two traces for the recompile audit")

@@ -145,6 +145,83 @@ def verify_step(model: Model, params, cache, tokens, t_new, lengths):
 
 
 # --------------------------------------------------------------------------
+# tensor-parallel step family (distributed/tp_pool.py)
+# --------------------------------------------------------------------------
+# Same signatures + semantics as the single-device steps above, plus a
+# static ``shardings`` pytree (hashable ``(flat NamedShardings, treedef)``
+# form, see tp_pool._static) that pins the output cache back onto its
+# per-device shards and gathers logits replicated. The inner call traces
+# straight through the jitted single-device step (nested jit inlines);
+# donation must be RE-declared here because an inlined jit's
+# donate_argnums are ignored. GSPMD derives the head-sharded attention
+# and column/row-sharded FFN partitioning from the committed param
+# shardings + these cache constraints — no shard_map, one executable per
+# geometry, findable in the same trace-audit registry as the rest.
+
+
+def _tp_constrain(tree, shardings):
+    """Pin every leaf of ``tree`` to the matching NamedSharding from the
+    static ``(flat, treedef)`` pair (order = treedef flatten order)."""
+    flat_s, treedef = shardings
+    flat = treedef.flatten_up_to(tree)
+    return jax.tree_util.tree_unflatten(treedef, [
+        jax.lax.with_sharding_constraint(x, s)
+        for x, s in zip(flat, flat_s)
+    ])
+
+
+def _tp_replicated(x, shardings):
+    """Constrain ``x`` fully replicated on the shardings' mesh — the
+    host-facing outputs (logits, draft windows) the scheduler samples."""
+    mesh = shardings[0][0].mesh
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4),
+                   static_argnames=("row_shardings",))
+def tp_prefill(model: Model, params, tokens, prompt_lengths, max_len,
+               extra=None, *, row_shardings):
+    """``prefill`` on the mesh: the fresh row cache comes back committed
+    to its TP shards (head axis), logits replicated for host-side
+    sampling. No donation — prefill allocates its cache internally."""
+    logits, cache = prefill(model, params, tokens, prompt_lengths, max_len,
+                            extra)
+    return (_tp_replicated(logits, row_shardings),
+            _tp_constrain(cache, row_shardings))
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("shardings",), donate_argnums=(2,))
+def tp_decode_step(model: Model, params, cache, token, *, shardings):
+    """``decode_step`` on the mesh (cache donated shard-for-shard)."""
+    logits, cache = decode_step(model, params, cache, token)
+    return (_tp_replicated(logits, shardings),
+            _tp_constrain(cache, shardings))
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("shardings",), donate_argnums=(2,))
+def tp_mixed_step(model: Model, params, cache, tokens, t_new, lengths, *,
+                  shardings):
+    """``mixed_step`` on the mesh (cache donated shard-for-shard)."""
+    logits, cache = mixed_step(model, params, cache, tokens, t_new, lengths)
+    return (_tp_replicated(logits, shardings),
+            _tp_constrain(cache, shardings))
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("shardings",), donate_argnums=(2,))
+def tp_verify_step(model: Model, params, cache, tokens, t_new, lengths, *,
+                   shardings):
+    """``verify_step`` on the mesh (cache donated shard-for-shard)."""
+    logits, cache = verify_step(model, params, cache, tokens, t_new, lengths)
+    return (_tp_replicated(logits, shardings),
+            _tp_constrain(cache, shardings))
+
+
+# --------------------------------------------------------------------------
 # the ONE profile-driven decode loop
 # --------------------------------------------------------------------------
 

@@ -157,6 +157,33 @@ out-of-blocks pressure, BEFORE preemption. None of this adds a device
 program: adoption is a table edit + one ``set_slot_length``, insertion
 and reclaim are pure host bookkeeping, and reserved KV bytes do not
 change — reuse, not growth.
+
+Sharded pools
+-------------
+Under tensor-parallel serving (distributed/tp_pool.py) the SAME block
+pool is laid out across a ``("model",)`` device mesh: each K/V leaf is
+sharded over its HEAD axis (``sharding.cache_specs_tp``; seq-axis
+fallback when heads don't divide), so every physical block exists as
+1/TP-width shards, one per device, and per-device reserved KV bytes drop
+to ~1/TP of the single-device pool. Nothing in this module changes to
+make that work, by construction:
+
+- every cross-cutting op here (``reorder``, ``rewind``, ``append_block``,
+  ``copy_block``, chunked/window writes) indexes the batch, sequence and
+  block axes only — never the head axis — so under GSPMD each device
+  runs the identical program on its own head shard;
+- the block table, refcounts, free-list, trie and ``lengths`` pinning
+  are HOST state (or replicated device state, for ``lengths``): one
+  authoritative copy drives all shards, which is why preemption replay,
+  CoW, speculative truncate and prefix-cache adoption compose with TP
+  with zero new code paths;
+- the garbage-sink convention (block 0) and validity masks are
+  positional, so they shard along for free.
+
+The invariant the TP gates enforce (bench_serve --tp): sharded serving
+is TOKEN-identical to single-device serving at any temperature — the
+row-sharded psum moves logits by at most an ulp, which argmax and top-p
+sampling survive.
 """
 from __future__ import annotations
 

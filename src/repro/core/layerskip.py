@@ -142,6 +142,26 @@ def draft_window(
     return window, cache
 
 
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("shardings",), donate_argnums=(4,))
+def tp_draft_window(
+    model: Model, exit_layer: int, n_draft: int, params, cache, token0,
+    n_live, lengths, *, shardings,
+):
+    """``draft_window`` on a tensor-parallel mesh (distributed/tp_pool.py):
+    traces through the single-device draft scan, then pins the donated
+    pool cache back to its per-device shards and the token window
+    replicated (the window is host state — the scheduler slices it).
+    Donation is re-declared because the inlined inner jit's is ignored."""
+    from repro.core import engine
+
+    window, cache = draft_window(
+        model, exit_layer, n_draft, params, cache, token0, n_live, lengths
+    )
+    return (engine._tp_replicated(window, shardings),
+            engine._tp_constrain(cache, shardings))
+
+
 def layerskip_generate(
     model: Model,
     params,

@@ -69,6 +69,13 @@ class ReplicaRouter:
     device, and leaves placement alone (shared default device, shared
     params object) otherwise. All replicas share ``base_key`` — the
     cross-replica determinism invariant depends on it.
+
+    ``tp > 1`` is the DP x TP fleet story: each replica becomes a
+    tensor-parallel pool (``Scheduler(tp_mesh=...)``) over its own
+    DISJOINT device group — ``sharding.replica_devices(group_size=tp)``
+    carves the host's devices into whole submeshes, so two replicas can
+    never partially overlap. ``devices`` may then be an explicit list of
+    device tuples (one ``tp``-sized group per replica).
     """
 
     def __init__(
@@ -91,16 +98,25 @@ class ReplicaRouter:
         base_key: Optional[jax.Array] = None,
         clock=time.perf_counter,
         devices: Any = "auto",
+        tp: Optional[int] = None,
     ):
         if replicas < 1:
             raise ValueError(f"need at least one replica, got {replicas}")
         if base_key is None:
             base_key = jax.random.PRNGKey(0)
+        self.tp = tp if tp is not None and tp > 1 else None
         if isinstance(devices, str) and devices == "auto":
-            devices = (
-                sharding.replica_devices(replicas)
-                if len(jax.devices()) > 1 else [None] * replicas
-            )
+            if self.tp is not None:
+                # whole disjoint groups; raises when the host can't form
+                # even one tp-sized submesh
+                devices = sharding.replica_devices(
+                    replicas, group_size=self.tp
+                )
+            else:
+                devices = (
+                    sharding.replica_devices(replicas)
+                    if len(jax.devices()) > 1 else [None] * replicas
+                )
         if len(devices) != replicas:
             raise ValueError(
                 f"{replicas} replicas need {replicas} device pins, "
@@ -111,9 +127,27 @@ class ReplicaRouter:
         # only ever hold preemption replays), so the router owns the knob
         self.priority_boost_after = priority_boost_after
         self.n_priority_boosts = 0
+        if self.tp is not None:
+            from repro.distributed import tp_pool
+
+            meshes = [
+                tp_pool.make_tp_mesh(self.tp, devices=group)
+                for group in devices
+            ]
+            # the scheduler's TPContext commits params to each submesh
+            # itself (sharded placement, not a whole-device pin)
+            placements = [
+                dict(device=None, tp_mesh=mesh) for mesh in meshes
+            ]
+            placed_params = [params] * replicas
+        else:
+            placements = [dict(device=dev) for dev in devices]
+            placed_params = [
+                sharding.place_replica(params, dev) for dev in devices
+            ]
         self.replicas: List[Scheduler] = [
             Scheduler(
-                model, sharding.place_replica(params, dev),
+                model, placed_params[i],
                 slots=slots, pad_to=pad_to, max_new_cap=max_new_cap,
                 eos_id=eos_id, paged=paged, block_size=block_size,
                 num_blocks=num_blocks, chunked=chunked,
@@ -124,9 +158,9 @@ class ReplicaRouter:
                 # variance never leaks into tokens
                 prefix_cache=prefix_cache,
                 base_key=base_key,  # SHARED: tokens must not depend on placement
-                clock=clock, replica_id=i, device=dev,
+                clock=clock, replica_id=i, **placements[i],
             )
-            for i, dev in enumerate(devices)
+            for i in range(replicas)
         ]
         self.waiting: Deque[ServeRequest] = deque()
         self.finished: List[ServeRequest] = []

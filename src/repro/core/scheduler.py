@@ -129,6 +129,7 @@ scheduling decision, never a numerics decision.
 from __future__ import annotations
 
 import time
+import types
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional
@@ -300,9 +301,15 @@ class Scheduler:
         clock=time.perf_counter,
         replica_id: int = 0,
         device=None,
+        tp_mesh=None,
     ):
         if policy not in ("continuous", "fixed"):
             raise ValueError(f"unknown policy {policy!r}")
+        if tp_mesh is not None and device is not None:
+            raise ValueError(
+                "tp_mesh and device are mutually exclusive: a TP pool's "
+                "placement is the mesh itself"
+            )
         if chunked and not paged:
             raise ValueError("chunked prefill requires the paged block-pool")
         if chunked and policy != "continuous":
@@ -343,6 +350,32 @@ class Scheduler:
             # device; params are placed by the router (sharding.place_replica)
             self.pool.cache = jax.device_put(self.pool.cache, device)
             self.base_key = jax.device_put(self.base_key, device)
+        # the ONE executable-dispatch seam: every prefill / decode /
+        # mixed / verify / draft call below goes through ``self._steps``.
+        # With a mesh, the TP context commits params + pool cache to their
+        # per-device shards and binds the sharded step family; block
+        # tables, slot bookkeeping and preemption replay stay pure host
+        # state either way.
+        self.tp_mesh = tp_mesh
+        if tp_mesh is not None:
+            from repro.distributed import tp_pool  # serving stays mesh-free
+
+            self._tp = tp_pool.TPContext(
+                model, params, tp_mesh,
+                cache_like=self.pool.cache, max_len=self.max_len,
+            )
+            self.params = self._tp.params
+            self.pool.cache = self._tp.place_cache(self.pool.cache)
+            self._steps = self._tp.executables()
+        else:
+            self._tp = None
+            self._steps = types.SimpleNamespace(
+                prefill=engine.prefill,
+                decode_step=engine.decode_step,
+                mixed_step=engine.mixed_step,
+                verify_step=engine.verify_step,
+                draft_window=layerskip.draft_window,
+            )
         self.chunked = chunked
         self.chunk_mgr: Optional[ChunkedPrefill] = None
         if chunked:
@@ -536,7 +569,7 @@ class Scheduler:
         assert slot is not None
         tokens, length = self._pad_prompt(req.prompt)
         n_prompt = int(length[0])
-        logits, row = engine.prefill(
+        logits, row = self._steps.prefill(
             self.model, self.params, tokens, length, self.max_len,
             self._request_extra(req),
         )
@@ -642,7 +675,7 @@ class Scheduler:
         extra = self._request_extra(req)
         if prof.prefix_shared:
             tokens, length = self._pad_prompt(prompts[0])
-            logits, row = engine.prefill(
+            logits, row = self._steps.prefill(
                 self.model, self.params, tokens, length, self.max_len, extra
             )
             self.n_prefills += 1
@@ -657,7 +690,7 @@ class Scheduler:
             rows = []
             for s, p in zip(slots, prompts):
                 tokens, length = self._pad_prompt(p)
-                logits, row = engine.prefill(
+                logits, row = self._steps.prefill(
                     self.model, self.params, tokens, length, self.max_len,
                     extra,
                 )
@@ -1092,11 +1125,11 @@ class Scheduler:
             base[slot] = st.kv_len
         self.pool.sync()
         lengths = jnp.asarray(base)
-        window, cache = layerskip.draft_window(
+        window, cache = self._steps.draft_window(
             self.model, e_step, k_step, self.params, self.pool.cache,
             jnp.asarray(self._token), jnp.asarray(n_live), lengths,
         )
-        logits, cache = engine.verify_step(
+        logits, cache = self._steps.verify_step(
             self.model, self.params, cache, window, jnp.asarray(w), lengths,
         )
         self.pool.cache = cache
@@ -1254,7 +1287,7 @@ class Scheduler:
             if not self.active and not self.groups:
                 return None  # everything preempted back to the queue
         self.pool.sync()
-        logits, cache = engine.decode_step(
+        logits, cache = self._steps.decode_step(
             self.model, self.params, self.pool.cache, jnp.asarray(self._token)
         )
         self.pool.cache = cache
@@ -1322,7 +1355,7 @@ class Scheduler:
         for slot, cur in self.chunk_mgr.cursors.items():
             base[slot] = cur.pos
         self.pool.sync()
-        logits, cache = engine.mixed_step(
+        logits, cache = self._steps.mixed_step(
             self.model, self.params, self.pool.cache,
             jnp.asarray(plan.tokens), jnp.asarray(plan.t_new),
             jnp.asarray(base),

@@ -17,6 +17,27 @@ EXPERIMENTS.md §Perf).
 
 Scanned-layer stacks ([L, ...] leaves) get the same spec shifted right by
 one (the layer axis is never sharded).
+
+TP serving
+----------
+The serving pool reuses the SAME megatron rules to shard one scheduler's
+executables over a 1-D ``("model",)`` mesh (``distributed/tp_pool.py``):
+
+- params via :func:`param_specs` with ``enable_tp=True`` (the
+  ``TP_MIN_PARAMS`` gate is a *training* default; serving opts in
+  explicitly so smoke-scale models shard too);
+- the KV pool via :func:`cache_specs_tp` — HEAD-axis sharding so the
+  column-sharded ``wk``/``wv`` outputs write their local heads without a
+  collective, falling back to the :func:`cache_specs_seqsharded` sequence
+  rule when ``n_kv_heads`` does not divide the mesh, else replicating;
+- ``lengths`` / ``block_tables`` leaves stay replicated: block tables are
+  host bookkeeping, identical on every device, so ``Scheduler`` /
+  ``BlockPool`` / ``PrefixCache`` / preemption replay run unchanged.
+
+Row-sharded projections (``wo``/``w2``) introduce a psum whose summation
+order differs from single-device matmuls, so logits agree to the last
+ulp, not bitwise — serving gates assert TOKEN identity (argmax /
+per-stream fold_in sampling), which is exact.
 """
 from __future__ import annotations
 
@@ -193,6 +214,39 @@ def cache_specs_seqsharded(
     )
 
 
+def cache_specs_tp(
+    cfg: ModelConfig, cache_like: Any, mesh: Mesh, batch: int
+) -> Any:
+    """Tensor-parallel serving pool specs: shard the KV HEAD axis over
+    'model' so each device holds the heads its column-sharded wk/wv
+    produce — paged writes stay local scatters, no collectives in the
+    cache plumbing. Falls back to the sequence axis (flash-decode style,
+    see :func:`cache_specs_seqsharded`) when ``n_kv_heads`` does not
+    divide the mesh axis, else to the replicated base spec. Scalar /
+    bookkeeping leaves (``lengths``, ``block_tables``) replicate — they
+    are the host-state mirror the scheduler owns."""
+    base = cache_specs(cfg, cache_like, mesh, batch)
+    msize = _axis_size(mesh, "model")
+
+    def upgrade(path, leaf, spec):
+        s = _path_str(path)
+        if leaf.ndim >= 3 and re.search(r"(k|v|c_kv|k_rope)$", s):
+            sdim = 2 if "scanned" in s else 1
+            hdim = sdim + 1
+            parts = list(spec) + [None] * (leaf.ndim - len(spec))
+            if hdim < leaf.ndim and leaf.shape[hdim] % msize == 0:
+                parts[hdim] = "model"
+                return P(*parts)
+            if leaf.shape[sdim] % msize == 0:
+                parts[sdim] = "model"
+                return P(*parts)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: upgrade(path, leaf, _get(base, path)), cache_like
+    )
+
+
 def fsdp_upgrade(
     cfg: ModelConfig,
     tree_like: Any,
@@ -253,23 +307,44 @@ def to_shardings(mesh: Mesh, spec_tree: Any) -> Any:
     )
 
 
-# ---- data-parallel replica placement (core/router.py) ----------------------
-# Step 1 of the multi-host serve plan: each ReplicaRouter pool pins its
-# params + KV cache to its own device slice. Today a "slice" is one whole
-# device (round-robin over jax.devices()); when the tensor-parallel pool
-# (step 2) lands, replica_devices grows into mesh-slice carving and
-# place_replica into a NamedSharding placement over that slice — the
-# router only ever sees these two seams.
+# ---- replica placement (core/router.py) ------------------------------------
+# Step 1 of the multi-host serve plan pinned each ReplicaRouter pool to
+# one whole device. Step 2 (the tensor-parallel pool) carves the host's
+# devices into disjoint contiguous GROUPS of ``group_size`` — each group
+# becomes one replica's ("model",) submesh. Groups are handed out whole:
+# two replicas either share the SAME group (time-sharing, single-host
+# CI) or touch no common device; a partial overlap is impossible by
+# construction.
 
-def replica_devices(n: int, devices: Optional[Sequence[Any]] = None) -> list:
+def replica_devices(
+    n: int, devices: Optional[Sequence[Any]] = None, *, group_size: int = 1
+) -> list:
     """Device pin per replica: round-robin over the host's devices (or an
     explicit pool), wrapping when replicas outnumber devices — replicas
     that share a device time-share it, which keeps the routing layer
-    testable on single-device CI hosts."""
+    testable on single-device CI hosts.
+
+    With ``group_size > 1`` (DP x TP) the pool is carved into disjoint
+    contiguous groups of that size and whole GROUPS round-robin instead:
+    wrapped replicas reuse an identical group, never a partially
+    overlapping one. Returns one device per replica when ``group_size``
+    is 1, else one tuple of devices per replica."""
     devs = list(devices) if devices is not None else list(jax.devices())
     if not devs:
         raise ValueError("no devices to place replicas on")
-    return [devs[i % len(devs)] for i in range(n)]
+    if group_size <= 1:
+        return [devs[i % len(devs)] for i in range(n)]
+    n_groups = len(devs) // group_size
+    if n_groups < 1:
+        raise ValueError(
+            f"group_size={group_size} needs at least that many devices, "
+            f"have {len(devs)}"
+        )
+    groups = [
+        tuple(devs[g * group_size:(g + 1) * group_size])
+        for g in range(n_groups)
+    ]
+    return [groups[i % n_groups] for i in range(n)]
 
 
 def place_replica(tree: Any, device: Any) -> Any:

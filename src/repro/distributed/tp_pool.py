@@ -1,0 +1,138 @@
+"""Tensor-parallel serving pool: one scheduler's executables sharded
+across a device mesh.
+
+The paper's §5 baseline stacks tensor parallelism under every other
+serving optimization — once batching is saturated, spreading ONE model's
+per-token work across more silicon is the only lever that still improves
+a single request's decode latency (Obs #2 idle-time argument; also
+Golden et al. and Park et al. in PAPERS.md). This module is the serving
+side of that lever:
+
+- :func:`make_tp_mesh` builds the 1-D ``("model",)`` mesh a pool runs on.
+- :class:`TPContext` owns the sharded placement: params via
+  ``sharding.param_specs(..., enable_tp=True)`` (megatron head/column/row
+  rules), the KV pool via ``sharding.cache_specs_tp`` (head-axis split,
+  sequence-axis fallback), and the hashable static sharding trees the TP
+  step executables (``engine.tp_prefill`` / ``tp_decode_step`` /
+  ``tp_mixed_step`` / ``tp_verify_step`` and
+  ``layerskip.tp_draft_window``) take as ``static_argnames`` so their
+  jit caches stay findable for the recompile/trace audits.
+- :func:`TPContext.executables` hands the scheduler ONE namespace with
+  the same call signatures as the single-device step family — the
+  dispatch seam ``Scheduler(tp_mesh=...)`` selects behind.
+
+Everything host-side is untouched: block tables, slot bookkeeping,
+preemption replay, the prefix cache and the router all operate on the
+same python state; only the device arrays under them are split. Per
+device that means reserved KV bytes ~ 1/TP (plus the tiny replicated
+``lengths`` / ``block_tables`` leaves) — :func:`max_per_device_bytes`
+measures the physical footprint the bench gates.
+"""
+from __future__ import annotations
+
+import functools
+import types
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distributed import sharding
+
+
+def make_tp_mesh(tp: int, devices: Optional[Sequence[Any]] = None) -> Mesh:
+    """1-D ``("model",)`` mesh over ``tp`` devices (default: the first
+    ``tp`` of ``jax.devices()``)."""
+    devs = list(devices) if devices is not None else list(jax.devices())[:tp]
+    if len(devs) != tp:
+        raise ValueError(
+            f"tensor-parallel mesh needs exactly tp={tp} devices, "
+            f"got {len(devs)}"
+        )
+    return Mesh(np.asarray(devs), ("model",))
+
+
+def _static(sharding_tree: Any):
+    """Hashable form of a NamedSharding tree for ``static_argnames``:
+    (flat tuple, treedef). NamedShardings and treedefs hash; dicts do
+    not."""
+    flat, treedef = jax.tree_util.tree_flatten(sharding_tree)
+    return (tuple(flat), treedef)
+
+
+def max_per_device_bytes(tree: Any) -> int:
+    """Physical per-device footprint of a (possibly sharded) array tree:
+    max over devices of the bytes actually resident there. Replicated
+    leaves count in full on every device; split leaves count their local
+    shard only — this is the number the 'reserved KV bytes <= 0.6x
+    single-device at TP=2' gate checks."""
+    per: dict = {}
+    for leaf in jax.tree_util.tree_leaves(tree):
+        shards = getattr(leaf, "addressable_shards", None)
+        if shards is None:
+            continue
+        for sh in shards:
+            per[sh.device] = per.get(sh.device, 0) + sh.data.nbytes
+    return max(per.values(), default=0)
+
+
+class TPContext:
+    """Sharded placement + executable set for one tensor-parallel pool.
+
+    Construction commits ``params`` to the mesh (megatron TP specs) and
+    computes — without allocating — the sharding trees for (a) the
+    resident pool cache and (b) the transient single-row prefill cache,
+    in the hashable static form the TP step jits key on.
+    """
+
+    def __init__(self, model, params, mesh: Mesh, *, cache_like,
+                 max_len: int):
+        cfg = model.config
+        self.mesh = mesh
+        self.model = model
+        pspecs = sharding.param_specs(cfg, params, mesh, enable_tp=True)
+        self.param_shardings = sharding.to_shardings(mesh, pspecs)
+        self.params = jax.device_put(params, self.param_shardings)
+
+        batch = _leading_dim(cache_like)
+        cspecs = sharding.cache_specs_tp(cfg, cache_like, mesh, batch)
+        self.cache_shardings = sharding.to_shardings(mesh, cspecs)
+        self.cache_static = _static(self.cache_shardings)
+
+        # tp_prefill builds its own [1, max_len] row cache internally; its
+        # output constraint needs a sharding tree for THAT shape family.
+        row_like = jax.eval_shape(lambda: model.init_cache(1, max_len))
+        rspecs = sharding.cache_specs_tp(cfg, row_like, mesh, 1)
+        self.row_shardings = sharding.to_shardings(mesh, rspecs)
+        self.row_static = _static(self.row_shardings)
+
+    def place_cache(self, cache: Any) -> Any:
+        """Commit a pool cache to its per-device shards."""
+        return jax.device_put(cache, self.cache_shardings)
+
+    def executables(self) -> types.SimpleNamespace:
+        """The TP step family with the single-device call signatures —
+        the one dispatch seam the scheduler routes every executable call
+        through (``self._steps``)."""
+        from repro.core import engine, layerskip
+
+        return types.SimpleNamespace(
+            prefill=functools.partial(
+                engine.tp_prefill, row_shardings=self.row_static),
+            decode_step=functools.partial(
+                engine.tp_decode_step, shardings=self.cache_static),
+            mixed_step=functools.partial(
+                engine.tp_mixed_step, shardings=self.cache_static),
+            verify_step=functools.partial(
+                engine.tp_verify_step, shardings=self.cache_static),
+            draft_window=functools.partial(
+                layerskip.tp_draft_window, shardings=self.cache_static),
+        )
+
+
+def _leading_dim(cache_like: Any) -> int:
+    for leaf in jax.tree_util.tree_leaves(cache_like):
+        if getattr(leaf, "ndim", 0) >= 1:
+            return int(leaf.shape[0])
+    return 1

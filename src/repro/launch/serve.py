@@ -59,7 +59,7 @@ from __future__ import annotations
 import argparse
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -270,6 +270,88 @@ def apply_profile_mix(
     return requests
 
 
+def mix_class_trace(
+    profile: data_mod.LengthProfile,
+    n_requests: int,
+    *,
+    pad_to: int,
+    max_new_cap: int,
+    vocab_size: int,
+    arrival_rate: float,
+    classes: Sequence[str] = (
+        "greedy", "sampling", "beam", "cfg", "speculative"
+    ),
+    burst_size: int = 4,
+    seed: int = 0,
+    temperature: float = 0.8,
+    top_p: float = 0.9,
+    n_beams: int = 2,
+    beam_eos_id: int = 2,
+    guidance: float = 2.0,
+    uncond_token: int = 0,
+    mask_offset: Optional[int] = None,
+    exit_layer: int = 1,
+    n_draft: int = 4,
+) -> List[ServeRequest]:
+    """Heterogeneous production-shaped trace: every request draws an SLA
+    class at random (seeded) from ``classes`` — ``greedy`` (temp 0),
+    ``sampling`` (the given temperature/top_p), ``beam`` (a BeamProfile
+    slot group), ``cfg`` (classifier-free guidance, a ContrastiveProfile
+    pair; ``contrastive`` is accepted as an alias), ``speculative``
+    (draft/verify windows) — with BURSTY Poisson arrivals (exponential
+    gaps between bursts of 1..``burst_size`` requests landing ~1 ms
+    apart, long-run rate = ``arrival_rate``; rate <= 0 means all at
+    t=0). Unlike :func:`apply_profile_mix`'s round-robin (built for A/B
+    arms that need identical work), this is the workload the per-class
+    p50/p99 TTFT/TPOT breakdown in :func:`serve_metrics` exists to
+    measure: interleaved classes contending for the same pool slots."""
+    known = {"greedy", "sampling", "beam", "cfg", "contrastive",
+             "speculative"}
+    classes = [c.strip() for c in classes if c.strip()]
+    for c in classes:
+        if c not in known:
+            raise ValueError(f"unknown request class {c!r}")
+    if not classes:
+        raise ValueError("need at least one request class")
+    rng = np.random.default_rng(seed)
+    ins, outs = data_mod.sample_lengths(profile, n_requests, seed=seed + 1)
+    t, burst_left = 0.0, 0
+    reqs: List[ServeRequest] = []
+    for i in range(n_requests):
+        if arrival_rate > 0:
+            if burst_left == 0:
+                t += rng.exponential(burst_size / arrival_rate)
+                burst_left = int(rng.integers(1, burst_size + 1))
+            else:
+                t += 1e-3
+            burst_left -= 1
+        cls = classes[int(rng.integers(0, len(classes)))]
+        r = ServeRequest(
+            rid=i,
+            prompt=rng.integers(0, vocab_size, size=min(int(ins[i]), pad_to)),
+            max_new=max(1, min(int(outs[i]), max_new_cap)),
+            t_arrival=t if arrival_rate > 0 else 0.0,
+            temperature=temperature if cls == "sampling" else 0.0,
+            top_p=top_p if cls == "sampling" else 1.0,
+        )
+        if cls == "beam":
+            r.profile = profiles.BeamProfile(
+                n_beams=n_beams, eos_id=beam_eos_id
+            )
+        elif cls in ("cfg", "contrastive"):
+            r.profile = profiles.ContrastiveProfile(
+                uncond_token=uncond_token, guidance=guidance,
+                mask_offset=mask_offset,
+            )
+        elif cls == "speculative":
+            r.profile = profiles.SpeculativeProfile(
+                temperature=r.temperature, top_p=r.top_p,
+                exit_layer=exit_layer, n_draft=n_draft,
+            )
+        reqs.append(r)
+    return reqs
+
+
 def request_class(r: ServeRequest) -> str:
     """SLA class of one request for the per-class latency breakdown:
     ``beam`` / ``contrastive`` (multi-stream slot groups), ``speculative``
@@ -327,6 +409,7 @@ def run_scheduler(
     prefix_cache: bool = False,
     priority_boost_after: Optional[float] = None, seed: int = 0,
     replicas: Optional[int] = None, devices="auto",
+    tp: Optional[int] = None,
     return_requests: bool = False,
 ):
     """Serve one trace; returns metrics (plus the scheduler's counters).
@@ -338,7 +421,11 @@ def run_scheduler(
     merges in the fleet metrics (spills, requeues, per-replica report,
     and the busy-time aggregate service rate). ``replicas=1`` is a
     one-replica router (the symmetric-accounting baseline the scaling
-    bench compares against); ``None`` (default) is the plain scheduler."""
+    bench compares against); ``None`` (default) is the plain scheduler.
+    ``tp=N`` shards the pool's executables + KV cache over an N-device
+    ("model",) mesh (distributed/tp_pool.py) — composable with
+    ``replicas`` (DP x TP: each replica serves on its own disjoint
+    submesh); tokens are identical to single-device serving."""
     if replicas is not None:
         return _run_router(
             model, params, requests, replicas=replicas, devices=devices,
@@ -346,15 +433,20 @@ def run_scheduler(
             eos_id=eos_id, policy=policy, paged=paged, block_size=block_size,
             num_blocks=num_blocks, chunked=chunked,
             prefill_budget=prefill_budget, prefix_cache=prefix_cache,
-            priority_boost_after=priority_boost_after, seed=seed,
+            priority_boost_after=priority_boost_after, seed=seed, tp=tp,
             return_requests=return_requests,
         )
+    tp_mesh = None
+    if tp is not None and tp > 1:
+        from repro.distributed import tp_pool
+
+        tp_mesh = tp_pool.make_tp_mesh(tp)
     sched = Scheduler(
         model, params, slots=slots, pad_to=pad_to, max_new_cap=max_new_cap,
         eos_id=eos_id, policy=policy, paged=paged, block_size=block_size,
         num_blocks=num_blocks, chunked=chunked, prefill_budget=prefill_budget,
         prefix_cache=prefix_cache, priority_boost_after=priority_boost_after,
-        base_key=jax.random.PRNGKey(seed),
+        base_key=jax.random.PRNGKey(seed), tp_mesh=tp_mesh,
     )
     t0 = time.perf_counter()
     done = sched.run(requests)
@@ -381,6 +473,17 @@ def run_scheduler(
             float(stalls.max()) * 1e3 if len(stalls) else 0.0
         ),
     )
+    if tp_mesh is not None:
+        from repro.distributed import tp_pool
+
+        m.update(
+            tp=tp,
+            # physical per-device footprint: ~1/TP of the logical pool
+            # plus the tiny replicated lengths/block-table leaves
+            kv_reserved_per_device_bytes=tp_pool.max_per_device_bytes(
+                sched.pool.cache
+            ),
+        )
     if sched.n_group_admissions:
         m.update(
             group_admissions=sched.n_group_admissions,
@@ -448,7 +551,8 @@ def _run_router(
     eos_id: Optional[int], policy: str, paged: bool, block_size: int,
     num_blocks: Optional[int], chunked: bool,
     prefill_budget: Optional[int], prefix_cache: bool,
-    priority_boost_after: Optional[float], seed: int, return_requests: bool,
+    priority_boost_after: Optional[float], seed: int,
+    tp: Optional[int] = None, return_requests: bool = False,
 ):
     """Replica-routed arm of ``run_scheduler``: one shared queue over N
     data-parallel pools (core/router.py). ``tokens_per_s`` stays the real
@@ -467,7 +571,7 @@ def _run_router(
         block_size=block_size, num_blocks=num_blocks, chunked=chunked,
         prefill_budget=prefill_budget, prefix_cache=prefix_cache,
         priority_boost_after=priority_boost_after,
-        base_key=jax.random.PRNGKey(seed),
+        base_key=jax.random.PRNGKey(seed), tp=tp,
     )
     t0 = time.perf_counter()
     done = router.run(requests)
@@ -497,6 +601,16 @@ def _run_router(
         ),
         per_replica=router.replica_report(done),
     )
+    if router.tp is not None:
+        from repro.distributed import tp_pool
+
+        m.update(
+            tp=router.tp,
+            kv_reserved_per_device_bytes=max(
+                tp_pool.max_per_device_bytes(s.pool.cache)
+                for s in router.replicas
+            ),
+        )
     if paged:
         bo = [s.mean_block_occupancy for s in router.replicas
               if s.block_occupancy_trace]
@@ -544,7 +658,7 @@ def warmup(model, params, *, slots: int, pad_to: int, max_new_cap: int,
            prefix_cache: bool = False,
            profile_mix: bool = False, n_beams: int = 2,
            speculative: bool = False, exit_layer: int = 1,
-           n_draft: int = 4) -> None:
+           n_draft: int = 4, tp: Optional[int] = None) -> None:
     """Compile the serving executables (single-slot prefill, pool decode
     step, slot scatter — plus block copy/length scatter when paged, plus
     the mixed step when chunked) before any timed run. ``profile_mix``
@@ -553,12 +667,18 @@ def warmup(model, params, *, slots: int, pad_to: int, max_new_cap: int,
     ``speculative`` warms the draft/verify pair at the given
     (exit_layer, n_draft) geometry. ``prefix_cache`` warms block
     adoption (``kv_cache.set_slot_length`` at the adopt signature) by
-    serving a prompt twice — the replay hits the trie."""
+    serving a prompt twice — the replay hits the trie. ``tp`` warms the
+    sharded TP step family on its own mesh instead."""
+    tp_mesh = None
+    if tp is not None and tp > 1:
+        from repro.distributed import tp_pool
+
+        tp_mesh = tp_pool.make_tp_mesh(tp)
     sched = Scheduler(
         model, params, slots=slots, pad_to=pad_to, max_new_cap=max_new_cap,
         paged=paged, block_size=block_size, num_blocks=num_blocks,
         chunked=chunked, prefill_budget=prefill_budget,
-        prefix_cache=prefix_cache,
+        prefix_cache=prefix_cache, tp_mesh=tp_mesh,
     )
     rng = np.random.default_rng(0)
     full_prompt = rng.integers(0, 8, size=pad_to)
@@ -655,6 +775,21 @@ def main(argv=None):
                          "own --batch-slots-sized pool + KV cache, pinned "
                          "to its own device when the host has several "
                          "(default: plain single scheduler, no router)")
+    ap.add_argument("--tp", type=int, default=None,
+                    help="tensor-parallel degree: shard each pool's "
+                         "executables + KV cache over an N-device "
+                         "('model',) mesh (distributed/tp_pool.py); "
+                         "composes with --replicas (DP x TP, disjoint "
+                         "submeshes). Tokens are identical to "
+                         "single-device serving")
+    ap.add_argument("--mix-classes", nargs="?", metavar="CLASSES",
+                    const="greedy,sampling,beam,cfg,speculative",
+                    default=None,
+                    help="heterogeneous trace: every request draws a "
+                         "random SLA class from this comma list (greedy | "
+                         "sampling | beam | cfg | speculative) with bursty "
+                         "arrivals, and the per-class p50/p99 TTFT/TPOT "
+                         "breakdown is printed (default classes: all five)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrivals per second; 0 = all at t=0")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -670,13 +805,36 @@ def main(argv=None):
     if args.prefix_cache and not args.chunked:
         ap.error("--prefix-cache requires --chunked (the cursor must be "
                  "able to start at the first uncached prompt token)")
+    if args.mix_classes and (args.profile_mix or args.shared_prefix):
+        ap.error("--mix-classes is its own trace generator; drop "
+                 "--profile-mix / --shared-prefix")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
     prof = data_mod.PAPER_PROFILES[args.profile]
-    if args.shared_prefix is not None:
+    mix_class_kinds = [
+        k.strip() for k in (args.mix_classes or "").split(",") if k.strip()
+    ]
+    if args.mix_classes:
+        ins, _ = data_mod.sample_lengths(
+            prof, args.n_requests, seed=args.seed + 1
+        )
+        pad_to = int(min(max(ins), 256))
+        reqs = mix_class_trace(
+            prof, args.n_requests, pad_to=pad_to, max_new_cap=args.max_new,
+            vocab_size=cfg.vocab_size, arrival_rate=args.arrival_rate,
+            classes=mix_class_kinds, burst_size=args.burst_size,
+            seed=args.seed,
+            temperature=args.temperature if args.temperature > 0 else 0.8,
+            top_p=args.top_p if args.top_p < 1.0 else 0.9,
+            n_beams=args.n_beams,
+            beam_eos_id=args.eos_id if args.eos_id is not None else 2,
+            guidance=args.guidance, exit_layer=args.exit_layer,
+            n_draft=args.n_draft,
+        )
+    elif args.shared_prefix is not None:
         pad_to = int(min(args.prefix_len * 2, 256))
         reqs = shared_prefix_trace(
             args.n_requests, n_prefixes=args.shared_prefix,
@@ -709,13 +867,17 @@ def main(argv=None):
             exit_layer=args.exit_layer, n_draft=args.n_draft,
         )
     mix_kinds = [k.strip() for k in (args.profile_mix or "").split(",")]
+    has_groups = bool(args.profile_mix) or bool(
+        {"beam", "cfg", "contrastive"} & set(mix_class_kinds)
+    )
     warmup(model, params, slots=args.batch_slots, pad_to=pad_to,
            max_new_cap=args.max_new, paged=args.paged,
            block_size=args.block_size, num_blocks=args.num_blocks,
            chunked=args.chunked, prefill_budget=args.prefill_budget,
-           profile_mix=bool(args.profile_mix), n_beams=args.n_beams,
-           speculative="speculative" in mix_kinds,
-           exit_layer=args.exit_layer, n_draft=args.n_draft)
+           profile_mix=has_groups, n_beams=args.n_beams,
+           speculative=("speculative" in mix_kinds
+                        or "speculative" in mix_class_kinds),
+           exit_layer=args.exit_layer, n_draft=args.n_draft, tp=args.tp)
     m = run_scheduler(
         model, params, reqs, slots=args.batch_slots, pad_to=pad_to,
         max_new_cap=args.max_new, eos_id=args.eos_id, policy=args.policy,
@@ -724,13 +886,15 @@ def main(argv=None):
         prefill_budget=args.prefill_budget,
         prefix_cache=args.prefix_cache,
         priority_boost_after=args.boost_after, seed=args.seed,
-        replicas=args.replicas,
+        replicas=args.replicas, tp=args.tp,
     )
     mode = args.policy + ("/paged" if args.paged else "") + (
         "/chunked" if args.chunked else "") + (
         "/pfx" if args.prefix_cache else "") + (
         "/mix" if args.profile_mix else "") + (
-        f"/x{args.replicas}" if args.replicas is not None else "")
+        "/classes" if args.mix_classes else "") + (
+        f"/x{args.replicas}" if args.replicas is not None else "") + (
+        f"/tp{args.tp}" if args.tp is not None else "")
     print(f"[serve/{mode}] {m['n_requests']} requests in "
           f"{m['wall_s']:.2f}s | {m['tokens_per_s']:.1f} tok/s | "
           f"occupancy={m['mean_slot_occupancy']:.2f} | "
@@ -769,6 +933,18 @@ def main(argv=None):
               f"acceptance={m['spec_acceptance']:.2f} | "
               f"tokens/step={m['spec_tokens_per_step']:.2f} | "
               f"commit hist={m['spec_commit_hist']}")
+    if args.mix_classes:
+        for cls, row in m["per_class"].items():
+            print(f"[serve/{mode}]   class {cls}: "
+                  f"{row['n_requests']} reqs | "
+                  f"ttft p50={row['ttft_p50_ms']:.0f}ms "
+                  f"p99={row['ttft_p99_ms']:.0f}ms | "
+                  f"tpot p50={row['tpot_p50_ms']:.1f}ms "
+                  f"p99={row['tpot_p99_ms']:.1f}ms")
+    if "tp" in m:
+        print(f"[serve/{mode}] tp={m['tp']} | kv reserved/device="
+              f"{m['kv_reserved_per_device_bytes'] / 1e6:.1f}MB "
+              f"(pool {m['kv_reserved_bytes'] / 1e6:.1f}MB logical)")
     if args.replicas is not None:
         print(f"[serve/{mode}] spills={m['spills']} | "
               f"requeues={m['requeues']} | "
